@@ -1,0 +1,88 @@
+"""Paper Figure 5 + Table 4: node/edge access distributions and the
+inter-round Jaccard similarity of sampled sets.
+
+Claims to reproduce qualitatively: node accesses ~ power law (static
+caches viable), edge accesses ~ exponential-ish (widely spread -> static
+caches fail for edges); adjacent retraining rounds re-sample highly
+overlapping node sets (reuse opportunity)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.dgraph import DynamicGraph
+from repro.core.sampling import TemporalSampler
+from repro.data.events import synth_ctdg
+
+
+def _collect(smp, stream, lo, hi, batch=600):
+    nodes, edges = [], []
+    for b in range(lo, hi, batch):
+        e = min(b + batch, hi)
+        seeds = np.concatenate([stream.src[b:e], stream.dst[b:e]])
+        ts = np.concatenate([stream.ts[b:e]] * 2).astype(np.float32)
+        for l in smp.sample(seeds, ts):
+            m = np.asarray(l.mask)
+            nodes.append(np.asarray(l.nbr_ids)[m])
+            edges.append(np.asarray(l.nbr_eids)[m])
+    return np.concatenate(nodes), np.concatenate(edges)
+
+
+def _tail_stats(counts):
+    """Top-k concentration: fraction of accesses to the top 1% / 10% of
+    distinct items (power law -> high concentration)."""
+    c = np.sort(counts)[::-1].astype(np.float64)
+    tot = c.sum()
+    k1 = max(1, len(c) // 100)
+    k10 = max(1, len(c) // 10)
+    return float(c[:k1].sum() / tot), float(c[:k10].sum() / tot)
+
+
+def _jaccard(a, b):
+    a, b = set(a.tolist()), set(b.tolist())
+    return len(a & b) / max(len(a | b), 1)
+
+
+def run() -> None:
+    stream = synth_ctdg(n_nodes=4_000, n_events=60_000, seed=4)
+    warm = 40_000
+    g = DynamicGraph(threshold=64, undirected=True)
+    g.add_edges(stream.src[:warm], stream.dst[:warm], stream.ts[:warm])
+    smp = TemporalSampler(g, (10, 10), policy="uniform", scan_pages=32)
+    import time
+    t0 = time.perf_counter()
+    n1, e1 = _collect(smp, stream, warm - 10_000, warm)
+    us = (time.perf_counter() - t0) * 1e6
+
+    _, n_counts = np.unique(n1, return_counts=True)
+    _, e_counts = np.unique(e1, return_counts=True)
+    n_top1, n_top10 = _tail_stats(n_counts)
+    e_top1, e_top10 = _tail_stats(e_counts)
+    emit("access/node_concentration", us,
+         f"top1%={n_top1:.3f};top10%={n_top10:.3f}")
+    emit("access/edge_concentration", us,
+         f"top1%={e_top1:.3f};top10%={e_top10:.3f}")
+
+    # Jaccard across adjacent rounds
+    g.add_edges(stream.src[warm:warm + 10_000],
+                stream.dst[warm:warm + 10_000],
+                stream.ts[warm:warm + 10_000])
+    smp2 = TemporalSampler(g, (10, 10), policy="uniform", scan_pages=32)
+    n2, e2 = _collect(smp2, stream, warm, warm + 10_000)
+    jn = _jaccard(n1, n2)
+    je = _jaccard(e1, e2)
+    emit("access/jaccard_nodes", 0.0, f"{jn:.3f}")
+    emit("access/jaccard_edges", 0.0, f"{je:.3f}")
+
+    save_json("access_patterns", {
+        "node_top1pct_frac": n_top1, "node_top10pct_frac": n_top10,
+        "edge_top1pct_frac": e_top1, "edge_top10pct_frac": e_top10,
+        "jaccard_nodes": jn, "jaccard_edges": je,
+        "paper_claim": "node access power-law, edge access spread "
+                       "(Fig.5); Jaccard node ~87-99%, edge lower "
+                       "(Tab.4)",
+    })
+
+
+if __name__ == "__main__":
+    run()

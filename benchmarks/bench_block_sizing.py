@@ -1,0 +1,74 @@
+"""Paper Table 6 / Figure 12: block-sizing strategies.
+
+Compares adjacency-list (block=1), strawman (block=batch count),
+fixed-size, and the paper's adaptive min(deg, tau) on: average/max block-
+list length, edge-data + metadata memory, and sampling throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.dgraph import DynamicGraph
+from repro.core.sampling import TemporalSampler
+from repro.data.events import synth_ctdg
+
+
+def run() -> None:
+    stream = synth_ctdg(n_nodes=5_000, n_events=100_000, seed=1)
+    batch = 10_000
+    results = {}
+    for policy, tau in [("adjlist", 1), ("strawman", 64), ("fixed", 64),
+                        ("adaptive", 64)]:
+        g = DynamicGraph(threshold=tau, min_block=4, block_policy=policy)
+        t0 = time.perf_counter()
+        for lo in range(0, len(stream), batch):
+            hi = lo + batch
+            g.add_edges(stream.src[lo:hi], stream.dst[lo:hi],
+                        stream.ts[lo:hi])
+        build_s = time.perf_counter() - t0
+        st = g.stats()
+
+        # sampling throughput at FIXED edge coverage: every policy must
+        # be able to see the newest ~512 edges per node, so small blocks
+        # mean long page lists to traverse (the paper's Fig.12 effect)
+        from repro.core.snapshot import build_snapshot
+        snap = build_snapshot(g)
+        coverage = 512
+        scan = max(1, int(np.ceil(coverage / snap.page_cap)))
+        smp = TemporalSampler(snap, fanouts=(10,), policy="recent",
+                              scan_pages=scan)
+        seeds = np.random.default_rng(0).integers(0, 5000, 2048)
+        seed_ts = np.full(2048, float(stream.ts[-1]))
+        smp.sample(seeds, seed_ts)            # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            smp.sample(seeds, seed_ts)
+        sample_us = (time.perf_counter() - t0) / 5 * 1e6
+        thpt = 2048 * 5 / ((time.perf_counter() - t0))
+
+        results[policy] = {
+            "scan_pages": scan, "page_cap": snap.page_cap,
+            "avg_list_len": st.avg_list_len,
+            "max_list_len": st.max_list_len,
+            "edge_data_mb": st.edge_data_bytes / 1e6,
+            "metadata_mb": st.metadata_bytes / 1e6,
+            "build_s": build_s,
+            "sample_us_per_batch": sample_us,
+            "sampled_nodes_per_s": thpt,
+        }
+        emit(f"block_sizing/{policy}", sample_us,
+             f"avg_len={st.avg_list_len:.2f};mem_mb="
+             f"{(st.edge_data_bytes + st.metadata_bytes) / 1e6:.1f}")
+    ratio = (results["strawman"]["avg_list_len"]
+             / max(results["adaptive"]["avg_list_len"], 1e-9))
+    results["paper_claim"] = ("adaptive reduces list length ~36.7x vs "
+                              "strawman at <5% extra edge memory (Tab.6)")
+    results["strawman_to_adaptive_len_ratio"] = ratio
+    save_json("block_sizing", results)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,176 @@
+"""Paper Figure 14: dynamic cache vs presampling static cache; effect of
+reuse + restoration; node vs edge hit rates; fetch-time reduction.
+
+Baselines:
+  * static_presample (GNNLab): before EVERY round, presample 2 epochs to
+    count accesses, then pin the top-C features for the round — the
+    paper's Fig. 14b shows this re-initialization dominating fetch time;
+  * static + reuse: re-initialize every second round;
+  * dynamic LRU without reuse/restore (cleared per round);
+  * ours: dynamic LRU/LFU/FIFO with reuse + restoration.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.dgraph import DynamicGraph
+from repro.core.feature_cache import FeatureCache
+from repro.core.sampling import TemporalSampler
+from repro.data.events import synth_ctdg
+
+
+def _round_accesses(smp, stream, lo, hi, batch=600):
+    """Id streams (node ids, edge ids) a round's sampling would access."""
+    nodes, edges = [], []
+    for b in range(lo, hi, batch):
+        e = min(b + batch, hi)
+        seeds = np.concatenate([stream.src[b:e], stream.dst[b:e]])
+        ts = np.concatenate([stream.ts[b:e]] * 2).astype(np.float32)
+        layers = smp.sample(seeds, ts)
+        for l in layers:
+            m = np.asarray(l.mask)
+            nodes.append(np.asarray(l.nbr_ids)[m])
+            edges.append(np.asarray(l.nbr_eids)[m])
+    return nodes, edges
+
+
+class _StaticCache:
+    """GNNLab-style: pinned top-C by presampled frequency."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.pinned = set()
+        self.init_time = 0.0
+
+    def initialize(self, access_batches):
+        t0 = time.perf_counter()
+        from collections import Counter
+        c = Counter()
+        for b in access_batches:
+            c.update(b.tolist())
+        self.pinned = {k for k, _ in c.most_common(self.capacity)}
+        self.init_time = time.perf_counter() - t0
+
+    def hit_rate(self, access_batches):
+        hits = tot = 0
+        for b in access_batches:
+            isin = np.isin(b, list(self.pinned)) if self.pinned else \
+                np.zeros(len(b), bool)
+            hits += int(isin.sum())
+            tot += len(b)
+        return hits / max(tot, 1)
+
+
+def run() -> None:
+    stream = synth_ctdg(n_nodes=4_000, n_events=60_000, seed=3)
+    warm = 30_000
+    g = DynamicGraph(threshold=64, undirected=True)
+    g.add_edges(stream.src[:warm], stream.dst[:warm], stream.ts[:warm])
+    results: Dict = {}
+    n_rounds, round_sz, epochs = 4, 6_000, 2
+    cap_n = int(0.10 * stream.n_nodes)
+    cap_e = int(0.10 * len(stream))
+
+    # precompute per-round per-epoch access traces
+    traces = []
+    for r in range(n_rounds):
+        lo = warm + r * round_sz
+        hi = lo + round_sz
+        g.add_edges(stream.src[lo:hi], stream.dst[lo:hi],
+                    stream.ts[lo:hi])
+        smp = TemporalSampler(g, (10, 10), policy="recent", scan_pages=32)
+        traces.append(_round_accesses(smp, stream, lo, hi))
+
+    # ---- ours: dynamic caches with reuse + restoration ----
+    for policy in ("lru", "lfu", "fifo"):
+        nc = FeatureCache(cap_n, 8, stream.n_nodes + 1, policy=policy,
+                          lam=0.5)
+        ec = FeatureCache(cap_e, 8, len(stream) + 1, policy=policy,
+                          lam=0.5)
+        feat = lambda ids: np.zeros((len(ids), 8), np.float32)
+        t0 = time.perf_counter()
+        for nodes_b, edges_b in traces:
+            nc.snapshot_round()
+            ec.snapshot_round()
+            for _ in range(epochs):
+                nc.restore_epoch()
+                ec.restore_epoch()
+                for nb, eb in zip(nodes_b, edges_b):
+                    nc.fetch(nb.astype(np.int32), feat)
+                    ec.fetch(eb.astype(np.int32), feat)
+        el = time.perf_counter() - t0
+        results[f"dynamic_{policy}"] = {
+            "node_hit": nc.hit_rate, "edge_hit": ec.hit_rate,
+            "fetch_s": el}
+        emit(f"cache/dynamic_{policy}", el * 1e6 / n_rounds,
+             f"node_hit={nc.hit_rate:.3f};edge_hit={ec.hit_rate:.3f}")
+
+    # ---- ours without reuse/restore (cleared each round) ----
+    nh = eh = 0.0
+    t0 = time.perf_counter()
+    for nodes_b, edges_b in traces:
+        nc = FeatureCache(cap_n, 8, stream.n_nodes + 1, policy="lru")
+        ec = FeatureCache(cap_e, 8, len(stream) + 1, policy="lru")
+        feat = lambda ids: np.zeros((len(ids), 8), np.float32)
+        for _ in range(epochs):
+            for nb, eb in zip(nodes_b, edges_b):
+                nc.fetch(nb.astype(np.int32), feat)
+                ec.fetch(eb.astype(np.int32), feat)
+        nh += nc.hit_rate / n_rounds
+        eh += ec.hit_rate / n_rounds
+    el = time.perf_counter() - t0
+    results["dynamic_lru_no_RR"] = {"node_hit": nh, "edge_hit": eh,
+                                    "fetch_s": el}
+    emit("cache/dynamic_lru_no_RR", el * 1e6 / n_rounds,
+         f"node_hit={nh:.3f};edge_hit={eh:.3f}")
+
+    # ---- GNNLab static presampling (re-init every round) ----
+    nh = eh = 0.0
+    init_s = serve_s = 0.0
+    for nodes_b, edges_b in traces:
+        sc_n = _StaticCache(cap_n)
+        sc_e = _StaticCache(cap_e)
+        sc_n.initialize(nodes_b)       # presample epoch ~= replay trace
+        sc_e.initialize(edges_b)
+        init_s += sc_n.init_time + sc_e.init_time
+        t0 = time.perf_counter()
+        for _ in range(epochs):
+            nh += sc_n.hit_rate(nodes_b) / (n_rounds * epochs)
+            eh += sc_e.hit_rate(edges_b) / (n_rounds * epochs)
+        serve_s += time.perf_counter() - t0
+    results["static_presample"] = {
+        "node_hit": nh, "edge_hit": eh, "init_s": init_s,
+        "init_frac": init_s / max(init_s + serve_s, 1e-9)}
+    emit("cache/static_presample", (init_s + serve_s) * 1e6 / n_rounds,
+         f"node_hit={nh:.3f};edge_hit={eh:.3f};"
+         f"init_frac={results['static_presample']['init_frac']:.2f}")
+
+    # ---- GNNLab static WITH reuse (init once, then stale; Fig. 14d) ----
+    sc_n = _StaticCache(cap_n)
+    sc_e = _StaticCache(cap_e)
+    sc_n.initialize(traces[0][0])
+    sc_e.initialize(traces[0][1])
+    nh = np.mean([sc_n.hit_rate(nb) for nb, _ in traces[1:]])
+    eh = np.mean([sc_e.hit_rate(eb) for _, eb in traces[1:]])
+    results["static_stale"] = {"node_hit": float(nh),
+                               "edge_hit": float(eh)}
+    emit("cache/static_stale", 0.0,
+         f"node_hit={nh:.3f};edge_hit={eh:.3f} (init reused, Fig14d)")
+
+    results["paper_claim"] = (
+        "dynamic cache + reuse/restoration cuts fetch time up to 14.6x; "
+        "static cache init ~90% of fetch time (ours: see init_frac); "
+        "a static cache without per-round re-init loses edge hits almost "
+        "entirely (Fig.14d) while node hits survive — edge features need "
+        "dynamic caching. Note: static_presample here is an ORACLE "
+        "(initialized on the exact evaluated trace), an upper bound for "
+        "any static policy.")
+    save_json("cache", results)
+
+
+if __name__ == "__main__":
+    run()

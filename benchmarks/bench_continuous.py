@@ -1,0 +1,98 @@
+"""Paper Figures 8/10/11: continuous-learning retraining time per
+incremental batch, finetune-epoch sweep, and replay-ratio accuracy.
+
+Runs the full §3 loop (ingest -> finetune -> evaluate) on a drifting
+synthetic stream with TGN and TGAT; reports per-round wall time split
+(graph update / sampling / fetching / training) and test-then-train AP.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs.tgn_gdelt import GNN_MODELS
+from repro.core.continuous import ContinuousTrainer
+from repro.data.events import synth_ctdg
+
+
+def run(quick: bool = True) -> None:
+    stream = synth_ctdg(n_nodes=2_000, n_events=24_000, t_span=100_000,
+                        d_node=16, d_edge=12, drift_every=25_000, seed=5)
+    warm = 12_000
+    results = {}
+
+    for model in ("tgn", "tgat"):
+        cfg = GNN_MODELS[model](d_node=16, d_edge=12, d_time=10,
+                                d_hidden=32, d_memory=16,
+                                fanouts=(8,) if model == "tgn"
+                                else (8, 4),
+                                batch_size=512)
+        tr = ContinuousTrainer(cfg, stream, threshold=32,
+                               cache_ratio=0.1, lr=2e-3, seed=0)
+        tr.ingest(stream.slice(0, warm - 4000))
+        tr.train_round(stream.slice(warm - 4000, warm), epochs=2)
+
+        aps, times = [], []
+        n_rounds = 3
+        rsz = 3_000
+        for r in range(n_rounds):
+            lo = warm + r * rsz
+            m = tr.train_round(stream.slice(lo, lo + rsz), epochs=2,
+                               replay_ratio=0.2)
+            aps.append(m.ap)
+            times.append(m.ingest_s + m.sample_s + m.fetch_s + m.train_s)
+            emit(f"continuous/{model}/round{r}", times[-1] * 1e6,
+                 f"ap={m.ap:.3f};ingest={m.ingest_s:.2f}s;"
+                 f"sample={m.sample_s:.2f}s;fetch={m.fetch_s:.2f}s;"
+                 f"train={m.train_s:.2f}s")
+        results[model] = {"ap_per_round": aps, "round_s": times}
+
+    # ---- finetune-epoch sweep (Fig. 10) ----
+    sweep = {}
+    for epochs in (1, 2, 3):
+        cfg = GNN_MODELS["tgat"](d_node=16, d_edge=12, d_time=10,
+                                 d_hidden=32, fanouts=(8, 4),
+                                 batch_size=512)
+        tr = ContinuousTrainer(cfg, stream, threshold=32,
+                               cache_ratio=0.1, lr=2e-3, seed=0)
+        tr.ingest(stream.slice(0, warm))
+        t0 = time.perf_counter()
+        tr.train_round(stream.slice(warm, warm + 4000), epochs=epochs)
+        m = tr.train_round(stream.slice(warm + 4000, warm + 8000),
+                           epochs=epochs)
+        sweep[epochs] = {"ap": m.ap,
+                         "time_s": time.perf_counter() - t0}
+        emit(f"continuous/epoch_sweep/{epochs}",
+             sweep[epochs]["time_s"] * 1e6, f"ap={m.ap:.3f}")
+    results["epoch_sweep"] = sweep
+
+    # ---- replay-ratio sweep (Fig. 11b) ----
+    replay = {}
+    for rr in (0.0, 0.5):
+        cfg = GNN_MODELS["tgat"](d_node=16, d_edge=12, d_time=10,
+                                 d_hidden=32, fanouts=(8, 4),
+                                 batch_size=512)
+        tr = ContinuousTrainer(cfg, stream, threshold=32,
+                               cache_ratio=0.1, lr=2e-3, seed=0)
+        tr.ingest(stream.slice(0, warm))
+        tr.train_round(stream.slice(warm, warm + 4000), epochs=2,
+                       replay_ratio=rr)
+        tr.train_round(stream.slice(warm + 4000, warm + 8000), epochs=2,
+                       replay_ratio=rr)
+        # evaluate retention on OLD data after drifted finetuning
+        old = tr.evaluate(stream.slice(warm - 3000, warm))
+        replay[rr] = {"old_data_ap": old["ap"]}
+        emit(f"continuous/replay/{rr}", 0.0,
+             f"old_ap={old['ap']:.3f}")
+    results["replay"] = replay
+    results["paper_claim"] = ("more frequent retraining within the same "
+                              "budget lifts AP (Fig.11); 2-3 epochs is "
+                              "the sweet spot (Fig.10); replay fights "
+                              "forgetting (Fig.11b)")
+    save_json("continuous", results)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Paper Table 2 / Figure 8: incremental graph update vs full rebuild.
+
+GNNFlow's claim: block-store incremental insertion is orders of magnitude
+faster than the TGL-style full reconstruction (T-CSR rebuild of ALL edges
+so far) that static-storage systems must perform per incremental batch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timeit
+from repro.core.dgraph import DynamicGraph
+from repro.core.snapshot import build_snapshot, refresh_snapshot
+from repro.data.events import synth_ctdg
+
+
+def _tcsr_rebuild(src, dst, ts, n_nodes):
+    """TGL-style static temporal-CSR build from scratch (the baseline's
+    per-batch cost). Returns (indptr, nbr, ts) sorted by (node, time)."""
+    order = np.lexsort((ts, src))
+    s, d, t = src[order], dst[order], ts[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr, s + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    return indptr, d, t
+
+
+def run() -> None:
+    stream = synth_ctdg(n_nodes=50_000, n_events=1_000_000, seed=0)
+    n_batches = 10
+    warm = len(stream) // 2
+    batch_sz = (len(stream) - warm) // n_batches
+
+    results = {}
+    # ---- ours: incremental block insertion + snapshot refresh ----
+    g = DynamicGraph(threshold=64, undirected=True)
+    g.add_edges(stream.src[:warm], stream.dst[:warm], stream.ts[:warm])
+    snap = build_snapshot(g)
+    t_upd = []
+    import time
+    for b in range(n_batches):
+        lo = warm + b * batch_sz
+        hi = lo + batch_sz
+        t0 = time.perf_counter()
+        g.add_edges(stream.src[lo:hi], stream.dst[lo:hi],
+                    stream.ts[lo:hi])
+        snap = refresh_snapshot(g, snap)
+        t_upd.append(time.perf_counter() - t0)
+    ours_us = float(np.median(t_upd)) * 1e6
+
+    # ---- baseline: full rebuild of everything-so-far per batch ----
+    t_reb = []
+    for b in range(n_batches):
+        hi = warm + (b + 1) * batch_sz
+        src = np.concatenate([stream.src[:hi], stream.dst[:hi]])
+        dst = np.concatenate([stream.dst[:hi], stream.src[:hi]])
+        ts = np.concatenate([stream.ts[:hi], stream.ts[:hi]])
+        t0 = time.perf_counter()
+        _tcsr_rebuild(src, dst, ts, stream.n_nodes)
+        t_reb.append(time.perf_counter() - t0)
+    rebuild_us = float(np.median(t_reb)) * 1e6
+
+    speedup = rebuild_us / ours_us
+    emit("graph_update/incremental", ours_us,
+         f"batch={batch_sz}edges")
+    emit("graph_update/full_rebuild", rebuild_us,
+         f"speedup_ours={speedup:.1f}x")
+    # the structural point (paper Tab.2): rebuild scales with TOTAL graph
+    # size, incremental update with BATCH size — the gap diverges
+    first_r, last_r = t_reb[0] * 1e6, t_reb[-1] * 1e6
+    first_u, last_u = t_upd[0] * 1e6, t_upd[-1] * 1e6
+    emit("graph_update/scaling", 0.0,
+         f"rebuild {first_r / 1e3:.0f}->{last_r / 1e3:.0f}ms grows with "
+         f"graph; ours {first_u / 1e3:.0f}->{last_u / 1e3:.0f}ms ~flat")
+    save_json("graph_update", {
+        "batch_edges": batch_sz, "incremental_us": ours_us,
+        "rebuild_us": rebuild_us, "speedup": speedup,
+        "rebuild_first_us": first_r, "rebuild_last_us": last_r,
+        "incremental_first_us": first_u, "incremental_last_us": last_u,
+        "paper_claim": "9.4x-21.1x faster continuous learning (Fig.8); "
+                       "graph update 0.12s vs TGL rebuild 170.8s on GDELT "
+                       "(1.9B-edge scale; the gap grows with graph size)",
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by `python -m repro.launch.dryrun
+--all`) and emits one row per (arch x shape x mesh) with the three terms,
+the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPS. Also writes the
+markdown tables consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit, save_json
+
+DRYRUN = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = None, tagged: bool = False):
+    cells = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(f.read_text())
+        if not d.get("ok"):
+            continue
+        if bool(d.get("tag")) != tagged:
+            continue
+        if mesh and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def markdown_table(cells) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+           " dominant | model/hlo flops | roofline_frac | hbm_frac |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for d in cells:
+        t = d["roofline"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {d['dominant'][:-2]} "
+            f"| {d['model_to_hlo_flops']:.3f} "
+            f"| {d['roofline_frac']:.4f} "
+            f"| {d['memory']['hbm_frac']:.2f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def run() -> None:
+    cells = load_cells(mesh="single")
+    multi = load_cells(mesh="multi")
+    for d in cells:
+        t = d["roofline"]
+        emit(f"roofline/{d['arch']}/{d['shape']}",
+             max(t.values()) * 1e6,
+             f"dom={d['dominant'][:-2]};rf={d['roofline_frac']:.4f}")
+    emit("roofline/cells_single", 0.0, f"{len(cells)}")
+    emit("roofline/cells_multi", 0.0, f"{len(multi)}")
+    out = Path(__file__).resolve().parent.parent / "artifacts"
+    (out / "roofline_single.md").write_text(markdown_table(cells))
+    (out / "roofline_multi.md").write_text(markdown_table(multi))
+    save_json("roofline_summary", {
+        "single_cells": len(cells), "multi_cells": len(multi),
+        "dominant_counts": _hist(cells)})
+
+
+def _hist(cells):
+    h = {}
+    for d in cells:
+        h[d["dominant"]] = h.get(d["dominant"], 0) + 1
+    return h
+
+
+if __name__ == "__main__":
+    run()

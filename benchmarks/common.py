@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing. Every bench emits CSV rows:
+``name,us_per_call,derived`` (derived = the bench's headline metric)."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_ROWS)
+
+
+def save_json(name: str, payload: Dict) -> None:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"{name}.json").write_text(
+        json.dumps(payload, indent=2, default=str))
+
+
+def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall time per call, in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

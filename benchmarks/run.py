@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of bench names to run")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_access_patterns, bench_block_sizing,
+                            bench_cache, bench_continuous,
+                            bench_graph_update, bench_roofline,
+                            bench_sampling, bench_scaling)
+    benches = {
+        "graph_update": bench_graph_update.run,      # Tab.2 / Fig.8
+        "block_sizing": bench_block_sizing.run,      # Tab.6 / Fig.12
+        "sampling": bench_sampling.run,              # Fig.9 / Fig.13
+        "cache": bench_cache.run,                    # Fig.14
+        "access_patterns": bench_access_patterns.run,  # Fig.5 / Tab.4
+        "continuous": bench_continuous.run,          # Fig.8/10/11
+        "scaling": bench_scaling.run,                # Fig.15 / Tab.7
+        "roofline": bench_roofline.run,              # deliverable (g)
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and name not in args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going, surface failure
+            print(f"{name}/FAILED,0,{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

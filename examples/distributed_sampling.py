@@ -1,0 +1,44 @@
+"""Distributed sampling demo: hash-partitioned graph over 4 simulated
+machines x 4 trainers, static rank-matched scheduling (paper §4.4,
+Fig. 6), load-balance CV and wire-bytes accounting.
+
+    PYTHONPATH=src python examples/distributed_sampling.py
+"""
+import numpy as np
+
+from repro.core.partition import Dispatcher, GraphPartition
+from repro.core.scheduler import DistributedSamplerSystem
+from repro.data.events import synth_ctdg
+
+P, G = 4, 4
+stream = synth_ctdg(n_nodes=8_000, n_events=80_000, seed=2)
+
+parts = [GraphPartition(p, P, threshold=64) for p in range(P)]
+disp = Dispatcher(parts)
+
+# stream ingestion in incremental batches, dispatched to owners
+for lo in range(0, len(stream), 10_000):
+    hi = lo + 10_000
+    disp.add_edges(stream.src[lo:hi], stream.dst[lo:hi],
+                   stream.ts[lo:hi])
+st = disp.stats()
+print(f"partition edge counts: {st.edges_per_part} "
+      f"(CV={st.edge_balance_cv:.3f}), "
+      f"dispatch traffic {st.bytes_dispatched / 1e6:.1f} MB")
+
+sys_ = DistributedSamplerSystem(parts, n_gpus=G, fanouts=(10, 10),
+                                policy="recent", scan_pages=16)
+rng = np.random.default_rng(0)
+for machine in range(P):
+    for rank in range(G):
+        seeds = rng.integers(0, stream.n_nodes, 600)
+        layers = sys_.sample(machine, rank, seeds,
+                             np.full(600, float(stream.ts[-1]),
+                                     np.float32))
+load = sys_.load_stats()
+print("per-(machine,rank) sampled targets:")
+print(load.per_worker_targets)
+print(f"load-balance CV = {load.cv:.4f}  (paper reports < 0.06)")
+print(f"remote sampling traffic: requests "
+      f"{load.request_bytes / 1e6:.2f} MB, responses "
+      f"{load.response_bytes / 1e6:.2f} MB")

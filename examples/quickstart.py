@@ -1,0 +1,39 @@
+"""Quickstart: the GNNFlow API in ~40 lines (paper Fig. 7 analog).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.tgn_gdelt import tgn
+from repro.core.continuous import ContinuousTrainer
+from repro.data.events import synth_ctdg
+
+# a dynamic graph stream: power-law CTDG with community structure
+stream = synth_ctdg(n_nodes=1_000, n_events=8_000, t_span=50_000,
+                    d_node=16, d_edge=12, seed=0)
+
+# TGN with node memory, recent sampling, fanout 8 (paper defaults scaled)
+cfg = tgn(d_node=16, d_edge=12, d_time=10, d_hidden=32, d_memory=16,
+          fanouts=(8,), batch_size=256)
+
+trainer = ContinuousTrainer(cfg, stream, threshold=32, cache_ratio=0.1,
+                            lr=2e-3, seed=0)
+
+# warm start: ingest most of the history, finetune on the last chunk
+# (train_round ingests its own batch — the paper's evaluate-then-train)
+warm = len(stream) // 2
+trainer.ingest(stream.slice(0, warm - 2_000))
+trainer.train_round(stream.slice(warm - 2_000, warm), epochs=2)
+
+# continuous learning: evaluate-then-train on each incremental batch
+chunk = 1_000
+for r, lo in enumerate(range(warm, len(stream) - chunk, chunk)):
+    m = trainer.train_round(stream.slice(lo, lo + chunk), epochs=2)
+    print(f"round {r}: test-then-train AP={m.ap:.3f} "
+          f"loss={m.loss:.4f} "
+          f"[ingest {m.ingest_s * 1e3:.0f}ms | sample "
+          f"{m.sample_s * 1e3:.0f}ms | fetch {m.fetch_s * 1e3:.0f}ms | "
+          f"train {m.train_s * 1e3:.0f}ms] "
+          f"cache hits: node {m.node_hit_rate:.2f} "
+          f"edge {m.edge_hit_rate:.2f}")
+print("done — the graph store was updated in place, never rebuilt.")

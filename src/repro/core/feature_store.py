@@ -1,0 +1,145 @@
+"""Distributed feature store (GNNFlow §4.4): node/edge features + TGN node
+memories, partitioned by the same hash as the graph.
+
+Host-resident (the paper keeps features in shared host memory too); the
+device-side FeatureCache sits in front. Node features and memories are
+dense arrays indexed by node id; edge features are stored append-only in
+edge-id order (new edges get larger ids), so lookups are O(1) — the
+paper's "searchsorted over ascending edge ids" degenerates to direct
+indexing with our contiguous id assignment.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.partition import owner_of
+
+_GROW = 1.5
+
+
+class _Dense:
+    """Growable dense (id -> vector) table."""
+
+    def __init__(self, dim: int, initial: int = 1024):
+        self.dim = dim
+        self.data = np.zeros((initial, dim), np.float32)
+        self.size = 0
+
+    def _ensure(self, n: int) -> None:
+        if n <= len(self.data):
+            if n > self.size:
+                self.size = n
+            return
+        new = max(int(len(self.data) * _GROW), n)
+        grown = np.zeros((new, self.dim), np.float32)
+        grown[:len(self.data)] = self.data
+        self.data = grown
+        self.size = n
+
+    def set(self, ids: np.ndarray, vals: np.ndarray) -> None:
+        if len(ids) == 0:
+            return
+        self._ensure(int(ids.max()) + 1)
+        self.data[ids] = vals
+
+    def get(self, ids: np.ndarray) -> np.ndarray:
+        out = np.zeros((len(ids), self.dim), np.float32)
+        ok = (ids >= 0) & (ids < self.size)
+        out[ok] = self.data[ids[ok]]
+        return out
+
+
+class FeatureStorePartition:
+    """One machine's feature shard."""
+
+    def __init__(self, part_id: int, n_parts: int, d_node: int,
+                 d_edge: int, d_memory: int = 0):
+        self.part_id = part_id
+        self.n_parts = n_parts
+        self.node = _Dense(d_node)
+        self.edge = _Dense(d_edge)
+        self.memory = _Dense(d_memory) if d_memory else None
+        self.mem_ts = _Dense(1) if d_memory else None
+
+
+class DistributedFeatureStore:
+    """Facade over P feature partitions with remote-byte accounting.
+
+    Nodes (and memories) are owned by hash(node) % P; edge features are
+    owned by hash(src) % P (co-located with the edge's graph shard).
+    """
+
+    def __init__(self, n_parts: int, d_node: int, d_edge: int,
+                 d_memory: int = 0, local_rank: int = 0):
+        self.parts = [FeatureStorePartition(p, n_parts, d_node, d_edge,
+                                            d_memory)
+                      for p in range(n_parts)]
+        self.n_parts = n_parts
+        self.d_node, self.d_edge, self.d_memory = d_node, d_edge, d_memory
+        self.local_rank = local_rank
+        self.remote_bytes = 0
+        self._edge_owner = _Dense(1)   # edge id -> owner partition
+
+    # -- writes ---------------------------------------------------------
+    def put_node_features(self, ids, feats) -> None:
+        ids = np.asarray(ids, np.int64)
+        own = owner_of(ids, self.n_parts)
+        for p in range(self.n_parts):
+            sel = own == p
+            if sel.any():
+                self.parts[p].node.set(ids[sel], np.asarray(feats)[sel])
+
+    def put_edge_features(self, eids, src, feats) -> None:
+        eids = np.asarray(eids, np.int64)
+        own = owner_of(np.asarray(src, np.int64), self.n_parts)
+        self._edge_owner.set(eids, own[:, None].astype(np.float32))
+        for p in range(self.n_parts):
+            sel = own == p
+            if sel.any():
+                self.parts[p].edge.set(eids[sel], np.asarray(feats)[sel])
+
+    # -- reads (remote-byte accounted) ----------------------------------
+    def _fetch(self, table: str, ids: np.ndarray, dim: int) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        out = np.zeros((len(ids), dim), np.float32)
+        if table == "edge":
+            own = self._edge_owner.get(ids)[:, 0].astype(np.int64)
+        else:
+            own = owner_of(np.maximum(ids, 0), self.n_parts)
+        for p in range(self.n_parts):
+            sel = (own == p) & (ids >= 0)
+            if not sel.any():
+                continue
+            t = getattr(self.parts[p], table)
+            out[sel] = t.get(ids[sel])
+            if p != self.local_rank:
+                self.remote_bytes += int(sel.sum()) * dim * 4
+        return out
+
+    def get_node_features(self, ids) -> np.ndarray:
+        return self._fetch("node", ids, self.d_node)
+
+    def get_edge_features(self, eids) -> np.ndarray:
+        return self._fetch("edge", eids, self.d_edge)
+
+    # -- TGN node memory --------------------------------------------------
+    def get_memory(self, ids) -> np.ndarray:
+        return self._fetch("memory", ids, self.d_memory)
+
+    def get_memory_ts(self, ids) -> np.ndarray:
+        return self._fetch("mem_ts", ids, 1)[:, 0]
+
+    def put_memory(self, ids, mem, ts) -> None:
+        ids = np.asarray(ids, np.int64)
+        own = owner_of(ids, self.n_parts)
+        for p in range(self.n_parts):
+            sel = own == p
+            if not sel.any():
+                continue
+            self.parts[p].memory.set(ids[sel], np.asarray(mem)[sel])
+            self.parts[p].mem_ts.set(
+                ids[sel], np.asarray(ts)[sel][:, None])
+            if p != self.local_rank:
+                self.remote_bytes += int(sel.sum()) * (self.d_memory + 1) * 4

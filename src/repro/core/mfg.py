@@ -1,0 +1,55 @@
+"""Assemble sampled neighborhoods + fetched features into jit-ready
+batches ("MFG"s, message-flow graphs, following TGL's terminology).
+
+This is the paper's *feature fetching* phase: node/edge features come
+through the device FeatureCache (GNNFlow §4.3) backed by the (possibly
+remote) DistributedFeatureStore; TGN node memories are always fetched
+fresh (they mutate every batch — caching them would serve stale state).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import SampledLayer
+
+
+def assemble(layers: List[SampledLayer],
+             fetch_node: Callable[[np.ndarray], np.ndarray],
+             fetch_edge: Callable[[np.ndarray], np.ndarray],
+             fetch_memory: Optional[Callable[[np.ndarray], np.ndarray]]
+             = None) -> List[Dict[str, jnp.ndarray]]:
+    """Returns hops[l] dicts for repro.models.gnn.gnn_embed."""
+    hops = []
+    for layer in layers:
+        dst_ids = np.asarray(layer.dst_nodes, np.int64)
+        nbr_ids = np.asarray(layer.nbr_ids, np.int64)
+        eids = np.asarray(layer.nbr_eids, np.int64)
+        N, K = nbr_ids.shape
+
+        dst_feat = np.asarray(fetch_node(dst_ids))
+        nbr_feat = np.asarray(fetch_node(nbr_ids.reshape(-1))) \
+            .reshape(N, K, -1)
+        edge_feat = np.asarray(fetch_edge(eids.reshape(-1))) \
+            .reshape(N, K, -1)
+        if fetch_memory is not None:
+            dst_mem = np.asarray(fetch_memory(dst_ids))
+            nbr_mem = np.asarray(
+                fetch_memory(nbr_ids.reshape(-1))).reshape(N, K, -1)
+            dst_feat = np.concatenate([dst_feat, dst_mem], axis=-1)
+            nbr_feat = np.concatenate([nbr_feat, nbr_mem], axis=-1)
+
+        dt = (np.asarray(layer.dst_times)[:, None]
+              - np.asarray(layer.nbr_ts))
+        dt = np.where(np.asarray(layer.mask), np.maximum(dt, 0.0), 0.0)
+
+        hops.append({
+            "dst_feat": jnp.asarray(dst_feat, jnp.float32),
+            "nbr_feat": jnp.asarray(nbr_feat, jnp.float32),
+            "edge_feat": jnp.asarray(edge_feat, jnp.float32),
+            "dt": jnp.asarray(dt, jnp.float32),
+            "mask": jnp.asarray(np.asarray(layer.mask)),
+        })
+    return hops

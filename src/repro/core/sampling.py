@@ -1,0 +1,266 @@
+"""Temporal k-hop neighborhood sampling (GNNFlow §4.2, Algorithm 1).
+
+Three interchangeable implementations (tests assert agreement):
+
+  * ``oracle_sample``     — trusted numpy reference walking the dynamic
+                            graph's block lists exactly as Algorithm 1.
+  * ``TemporalSampler``   — vectorized jnp path over the paged snapshot:
+                            one gather of the newest `scan_pages` pages per
+                            target, masked window intersection on the VPU,
+                            newest-K (recent) or Gumbel-top-k (uniform)
+                            selection. This is the TPU-native re-derivation
+                            of the paper's warp-per-target binary-search
+                            kernel: scalar binary search becomes a masked
+                            vector compare over 128-lane pages.
+  * Pallas kernel         — kernels/temporal_sample (recent policy), used
+                            via ``use_pallas=True`` and validated in
+                            interpret mode against both paths.
+
+Static shapes: every hop pads targets to a fixed budget and returns masked
+(N, K) neighbor tiles, so the whole GNN step jits once per shape.
+
+Bounded work note: device paths scan the newest ``scan_pages`` pages per
+target (kernel-friendly bounded work, recency-biased truncation for very
+deep histories); the oracle scans everything. With the paper's adaptive
+block sizing a hub node's page holds ``tau`` edges, so 16 pages cover
+4k+ newest edges per node — far beyond the fanouts used by the models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dgraph import DynamicGraph, NULL
+from repro.core.snapshot import GraphSnapshot, build_snapshot
+
+
+# ---------------------------------------------------------------------------
+# Sampled-subgraph containers (static shapes, mask-padded)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SampledLayer:
+    """One hop: for each target i, up to K sampled temporal neighbors."""
+    dst_nodes: np.ndarray | jnp.ndarray    # (N,) int32
+    dst_times: np.ndarray | jnp.ndarray    # (N,) float32
+    dst_mask: np.ndarray | jnp.ndarray     # (N,) bool
+    nbr_ids: np.ndarray | jnp.ndarray      # (N, K) int32
+    nbr_eids: np.ndarray | jnp.ndarray     # (N, K) int32
+    nbr_ts: np.ndarray | jnp.ndarray       # (N, K) float32
+    mask: np.ndarray | jnp.ndarray         # (N, K) bool
+
+    @property
+    def fanout(self) -> int:
+        return self.nbr_ids.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Oracle (numpy, exact Algorithm 1 over the block lists)
+# ---------------------------------------------------------------------------
+
+
+def _oracle_one(g: DynamicGraph, node: int, t_end: float, t_start: float,
+                k: int, policy: str, rng: np.random.Generator
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    nbrs, eids, tss = g.neighbors_in_window(node, t_start, t_end)
+    if len(nbrs) == 0:
+        return nbrs, eids, tss
+    if policy == "recent":
+        return nbrs[:k], eids[:k], tss[:k]
+    # uniform / window: uniform without replacement among candidates
+    take = min(k, len(nbrs))
+    sel = rng.choice(len(nbrs), size=take, replace=False)
+    return nbrs[sel], eids[sel], tss[sel]
+
+
+def oracle_sample(g: DynamicGraph, seeds: np.ndarray, seed_ts: np.ndarray,
+                  fanouts: Sequence[int], policy: str = "recent",
+                  window: float = 0.0, seed: int = 0
+                  ) -> List[SampledLayer]:
+    """Reference temporal k-hop sampling. Layer l's targets are layer
+    l-1's sampled neighbors queried at their edge timestamps."""
+    rng = np.random.default_rng(seed)
+    targets = np.asarray(seeds, np.int64)
+    times = np.asarray(seed_ts, np.float64)
+    tmask = np.ones(len(targets), bool)
+    layers: List[SampledLayer] = []
+    for k in fanouts:
+        N = len(targets)
+        nbr = np.full((N, k), NULL, np.int64)
+        eid = np.full((N, k), NULL, np.int64)
+        ts = np.zeros((N, k), np.float64)
+        msk = np.zeros((N, k), bool)
+        for i in range(N):
+            if not tmask[i]:
+                continue
+            t_end = times[i]
+            t_start = t_end - window if (policy == "window" and window > 0) \
+                else -np.inf
+            a, b, c = _oracle_one(g, int(targets[i]), t_end, t_start, k,
+                                  policy, rng)
+            m = len(a)
+            nbr[i, :m], eid[i, :m], ts[i, :m] = a, b, c
+            msk[i, :m] = True
+        layers.append(SampledLayer(
+            dst_nodes=targets.astype(np.int32),
+            dst_times=times.astype(np.float32), dst_mask=tmask.copy(),
+            nbr_ids=nbr.astype(np.int32), nbr_eids=eid.astype(np.int32),
+            nbr_ts=ts.astype(np.float32), mask=msk))
+        targets = nbr.reshape(-1)
+        times = ts.reshape(-1)
+        tmask = msk.reshape(-1)
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# Vectorized device path
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "policy", "scan_pages", "with_replacement"))
+def _sample_hop_jnp(page_table, page_size, page_tmin, page_tmax,
+                    pages_nbr, pages_eid, pages_ts, pages_valid,
+                    targets, t_end, t_start, tmask, rng_key, *,
+                    k: int, policy: str, scan_pages: int,
+                    with_replacement: bool = False):
+    """One hop for N targets. All page arrays are device-resident.
+
+    Returns (nbr (N,k), eid (N,k), ts (N,k), mask (N,k)).
+    """
+    N = targets.shape[0]
+    page_cap = pages_ts.shape[1]
+    in_range = (targets >= 0) & (targets < page_table.shape[0])
+    safe_t = jnp.clip(targets, 0, page_table.shape[0] - 1)
+    pt = page_table[safe_t][:, :scan_pages]               # (N, S)
+    pvalid = (pt != NULL) & (tmask & in_range)[:, None]
+    ptc = jnp.clip(pt, 0, pages_ts.shape[0] - 1)
+
+    # page-level window intersection (paper: skip blocks outside range)
+    tmin = page_tmin[ptc]
+    tmax = page_tmax[ptc]
+    p_hit = pvalid & (tmin < t_end[:, None]) & (tmax >= t_start[:, None])
+
+    # gather page lanes, newest-first within page (pages are ascending ts)
+    nbr = pages_nbr[ptc][:, :, ::-1]                      # (N, S, C)
+    eid = pages_eid[ptc][:, :, ::-1]
+    ts = pages_ts[ptc][:, :, ::-1]
+    val = pages_valid[ptc][:, :, ::-1]
+
+    in_win = (val & p_hit[:, :, None]
+              & (ts >= t_start[:, None, None])
+              & (ts < t_end[:, None, None]))              # (N, S, C)
+
+    W = scan_pages * page_cap
+    nbr_f = nbr.reshape(N, W)
+    eid_f = eid.reshape(N, W)
+    ts_f = ts.reshape(N, W)
+    m_f = in_win.reshape(N, W)                            # newest-first
+
+    if policy == "recent":
+        # stable-sort valids to the front, preserving newest-first order
+        order = jnp.argsort(~m_f, axis=-1, stable=True)[:, :k]
+    else:
+        # uniform among candidates: Gumbel top-k == sampling w/o replacement
+        gumbel = -jnp.log(-jnp.log(
+            jax.random.uniform(rng_key, (N, W), minval=1e-9, maxval=1.0)))
+        score = jnp.where(m_f, gumbel, -jnp.inf)
+        order = jax.lax.top_k(score, k)[1]
+
+    take = jnp.take_along_axis
+    out_m = take(m_f, order, axis=-1)
+    out_nbr = jnp.where(out_m, take(nbr_f, order, axis=-1), NULL)
+    out_eid = jnp.where(out_m, take(eid_f, order, axis=-1), NULL)
+    out_ts = jnp.where(out_m, take(ts_f, order, axis=-1), 0.0)
+    return out_nbr, out_eid, out_ts, out_m
+
+
+class TemporalSampler:
+    """Paper's sampler: recent / uniform / window policies, k-hop."""
+
+    def __init__(self, g_or_snap, fanouts: Sequence[int],
+                 policy: str = "recent", window: float = 0.0,
+                 scan_pages: int = 16, use_pallas: bool = False,
+                 seed: int = 0):
+        if isinstance(g_or_snap, DynamicGraph):
+            self.snap = build_snapshot(g_or_snap)
+        else:
+            self.snap = g_or_snap
+        self.fanouts = tuple(int(f) for f in fanouts)
+        assert policy in ("recent", "uniform", "window")
+        self.policy = policy
+        self.window = float(window)
+        self.scan_pages = int(scan_pages)
+        self.use_pallas = use_pallas
+        self._key = jax.random.PRNGKey(seed)
+        self._dev = None  # lazily device-put snapshot arrays
+
+    def refresh(self, snap: GraphSnapshot) -> None:
+        self.snap = snap
+        self._dev = None
+
+    def _device_arrays(self):
+        if self._dev is None:
+            s = self.snap
+            self._dev = dict(
+                page_table=jnp.asarray(s.page_table),
+                page_size=jnp.asarray(s.page_size),
+                page_tmin=jnp.asarray(s.page_tmin),
+                page_tmax=jnp.asarray(s.page_tmax),
+                pages_nbr=jnp.asarray(s.nbr),
+                pages_eid=jnp.asarray(s.eid),
+                pages_ts=jnp.asarray(s.ts),
+                pages_valid=jnp.asarray(s.valid),
+            )
+        return self._dev
+
+    def sample_hop(self, targets, times, tmask, k: int):
+        """One hop for (padded) targets; returns (nbr, eid, ts, mask)."""
+        dev = self._device_arrays()
+        targets = jnp.asarray(targets, jnp.int32)
+        times = jnp.asarray(times, jnp.float32)
+        tmask = jnp.asarray(tmask, bool)
+        scan = min(self.scan_pages, self.snap.page_table.shape[1])
+        self._key, sub = jax.random.split(self._key)
+        t_end = times
+        if self.policy == "window" and self.window > 0:
+            t_start = times - self.window
+        else:
+            t_start = jnp.full_like(times, -jnp.inf)
+        if self.use_pallas and self.policy == "recent":
+            from repro.kernels.temporal_sample.ops import (
+                temporal_sample_pallas)
+            return temporal_sample_pallas(
+                dev["page_table"][:, :scan], dev["page_tmin"],
+                dev["page_tmax"], dev["pages_nbr"], dev["pages_eid"],
+                dev["pages_ts"], dev["pages_valid"], targets, t_end,
+                t_start, tmask, k=k)
+        pol = "uniform" if self.policy == "window" else self.policy
+        return _sample_hop_jnp(
+            dev["page_table"], dev["page_size"], dev["page_tmin"],
+            dev["page_tmax"], dev["pages_nbr"], dev["pages_eid"],
+            dev["pages_ts"], dev["pages_valid"], targets, t_end,
+            t_start, tmask, sub, k=k, policy=pol, scan_pages=scan)
+
+    def sample(self, seeds, seed_ts) -> List[SampledLayer]:
+        """k-hop sampling; returns one SampledLayer per fanout entry."""
+        targets = jnp.asarray(seeds, jnp.int32)
+        times = jnp.asarray(seed_ts, jnp.float32)
+        tmask = jnp.ones(targets.shape, bool)
+        layers: List[SampledLayer] = []
+        for k in self.fanouts:
+            nbr, eid, ts, m = self.sample_hop(targets, times, tmask, k)
+            layers.append(SampledLayer(
+                dst_nodes=targets, dst_times=times, dst_mask=tmask,
+                nbr_ids=nbr, nbr_eids=eid, nbr_ts=ts, mask=m))
+            targets = nbr.reshape(-1)
+            times = ts.reshape(-1)
+            tmask = m.reshape(-1)
+        return layers

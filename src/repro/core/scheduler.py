@@ -1,0 +1,123 @@
+"""Static scheduling for distributed sampling (GNNFlow §4.4, Fig. 6).
+
+Policy: when trainer (machine m, local GPU rank r) must sample a target
+node owned by machine m', the request is serviced by the GPU with the SAME
+local rank r on m'. Every (machine, rank) pair therefore serves exactly
+one requester per remote machine per step — deterministic, coordination-
+free load balance (the paper measures CV < 0.06 across workers).
+
+In-container, machines are simulated partition objects and "RPC" is an
+in-process call with byte/latency accounting (DESIGN.md §2, §7); the
+schedule, routing and measured balance are the real artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.partition import GraphPartition, owner_of
+from repro.core.sampling import NULL, SampledLayer, TemporalSampler
+from repro.core.snapshot import build_snapshot
+
+
+@dataclasses.dataclass
+class SamplingLoadStats:
+    per_worker_targets: np.ndarray     # (machines, gpus)
+    request_bytes: int
+    response_bytes: int
+
+    @property
+    def cv(self) -> float:
+        x = self.per_worker_targets.reshape(-1).astype(np.float64)
+        return float(x.std() / x.mean()) if x.mean() else 0.0
+
+
+class DistributedSamplerSystem:
+    """P machines x G gpus; per-machine graph shard + per-rank samplers."""
+
+    def __init__(self, partitions: Sequence[GraphPartition], n_gpus: int,
+                 fanouts: Sequence[int], policy: str = "recent",
+                 window: float = 0.0, scan_pages: int = 16, seed: int = 0):
+        self.partitions = list(partitions)
+        self.n_machines = len(partitions)
+        self.n_gpus = n_gpus
+        self.fanouts = tuple(fanouts)
+        # one sampler per (machine, rank): rank share the machine snapshot
+        self.samplers: List[List[TemporalSampler]] = []
+        for m, part in enumerate(self.partitions):
+            snap = build_snapshot(part.graph)
+            self.samplers.append([
+                TemporalSampler(snap, fanouts, policy=policy,
+                                window=window, scan_pages=scan_pages,
+                                seed=seed * 1000 + m * 10 + r)
+                for r in range(n_gpus)])
+        self._load = np.zeros((self.n_machines, n_gpus), np.int64)
+        self.request_bytes = 0
+        self.response_bytes = 0
+
+    def refresh(self) -> None:
+        """Rebuild per-machine snapshots after graph updates."""
+        for m, part in enumerate(self.partitions):
+            snap = build_snapshot(part.graph)
+            for s in self.samplers[m]:
+                s.refresh(snap)
+
+    def _route_hop(self, trainer_machine: int, rank: int,
+                   targets: np.ndarray, times: np.ndarray,
+                   tmask: np.ndarray, k: int):
+        """Route one hop's targets to their owners (static schedule)."""
+        N = len(targets)
+        nbr = np.full((N, k), NULL, np.int32)
+        eid = np.full((N, k), NULL, np.int32)
+        ts = np.zeros((N, k), np.float32)
+        msk = np.zeros((N, k), bool)
+        owners = owner_of(np.maximum(targets, 0), self.n_machines)
+        for m in range(self.n_machines):
+            sel = (owners == m) & tmask & (targets >= 0)
+            if not sel.any():
+                continue
+            # static schedule: remote requests go to the same local rank
+            worker = self.samplers[m][rank]
+            self._load[m, rank] += int(sel.sum())
+            if m != trainer_machine:
+                self.request_bytes += int(sel.sum()) * 12   # (id, ts)
+            a, b, c, d = worker.sample_hop(targets[sel], times[sel],
+                                           tmask[sel], k)
+            nbr[sel] = np.asarray(a)
+            eid[sel] = np.asarray(b)
+            ts[sel] = np.asarray(c)
+            msk[sel] = np.asarray(d)
+            if m != trainer_machine:
+                self.response_bytes += int(sel.sum()) * k * 12
+        return nbr, eid, ts, msk
+
+    def sample(self, trainer_machine: int, rank: int, seeds, seed_ts
+               ) -> List[SampledLayer]:
+        """k-hop distributed sampling from one trainer's perspective."""
+        targets = np.asarray(seeds, np.int64)
+        times = np.asarray(seed_ts, np.float32)
+        tmask = np.ones(len(targets), bool)
+        layers: List[SampledLayer] = []
+        for k in self.fanouts:
+            nbr, eid, ts, msk = self._route_hop(
+                trainer_machine, rank, targets, times, tmask, k)
+            layers.append(SampledLayer(
+                dst_nodes=targets.astype(np.int32),
+                dst_times=times, dst_mask=tmask.copy(),
+                nbr_ids=nbr, nbr_eids=eid, nbr_ts=ts, mask=msk))
+            targets = nbr.reshape(-1).astype(np.int64)
+            times = ts.reshape(-1)
+            tmask = msk.reshape(-1)
+        return layers
+
+    def load_stats(self) -> SamplingLoadStats:
+        return SamplingLoadStats(per_worker_targets=self._load.copy(),
+                                 request_bytes=self.request_bytes,
+                                 response_bytes=self.response_bytes)
+
+    def reset_stats(self) -> None:
+        self._load[:] = 0
+        self.request_bytes = 0
+        self.response_bytes = 0

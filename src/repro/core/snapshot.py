@@ -1,0 +1,267 @@
+"""Device-facing paged snapshot of the dynamic graph (DESIGN.md §2).
+
+The paper places graph *metadata* (node table + block descriptors) on the
+GPU and leaves bulky edge data in host memory. The TPU/JAX analog: export
+the block structure as fixed-width *page tables* — for each node, the ids
+of its blocks (pages), newest first — plus the block descriptor arrays and
+the flat arena. All arrays are dense and static-shaped, so both the
+vectorized-jnp sampler and the Pallas kernel consume them directly.
+
+The snapshot is incremental: pages are immutable once full, so a snapshot
+refresh only appends/overwrites descriptor rows and the arena suffix that
+changed since the last refresh (mirroring the paper's "update without
+rebuild" property; see bench_graph_update.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.dgraph import NULL, DynamicGraph
+
+
+@dataclasses.dataclass
+class GraphSnapshot:
+    """Struct-of-arrays paged view. All int32/float32 (device-friendly)."""
+    # per node: page ids, NEWEST FIRST, padded with -1
+    page_table: np.ndarray        # (N, max_pages) int32
+    node_npages: np.ndarray       # (N,) int32
+    node_degree: np.ndarray       # (N,) int32
+    # per page (block): descriptors
+    page_size: np.ndarray         # (P,) int32  — filled entries
+    page_tmin: np.ndarray         # (P,) float32
+    page_tmax: np.ndarray         # (P,) float32
+    page_start: np.ndarray        # (P,) int32  — arena offset
+    page_cap: int                 # uniform padded page width for kernels
+    # arena (padded per page to page_cap for the kernel path); arrays may
+    # hold spare capacity rows beyond n_pages (never referenced by the
+    # page table, so harmless to samplers)
+    nbr: np.ndarray               # (P, page_cap) int32
+    eid: np.ndarray               # (P, page_cap) int32
+    ts: np.ndarray                # (P, page_cap) float32  (+inf padding)
+    valid: np.ndarray             # (P, page_cap) bool
+    n_pages: int = 0
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.node_npages)
+
+    @property
+    def num_pages(self) -> int:
+        return self.n_pages
+
+    def metadata_bytes(self) -> int:
+        return (self.page_table.nbytes + self.node_npages.nbytes
+                + self.node_degree.nbytes + self.page_size.nbytes
+                + self.page_tmin.nbytes + self.page_tmax.nbytes
+                + self.page_start.nbytes)
+
+    def edge_data_bytes(self) -> int:
+        return (self.nbr.nbytes + self.eid.nbytes + self.ts.nbytes
+                + self.valid.nbytes)
+
+
+def build_snapshot(g: DynamicGraph, *, page_cap: Optional[int] = None
+                   ) -> GraphSnapshot:
+    # always at least one (empty) node/page row: samplers gather rows by
+    # clipped index, which requires non-zero extents
+    n = max(g.n_nodes, 1)
+    nb = g.n_blocks
+    if page_cap is None:
+        page_cap = int(g.blk_cap[:nb].max()) if nb else 1
+        # round up to a TPU-lane-friendly width
+        page_cap = max(8, int(2 ** np.ceil(np.log2(max(page_cap, 1)))))
+
+    max_pages = int(g.nblocks[:n].max()) if n else 1
+    max_pages = max(max_pages, 1)
+
+    # --- page tables, fully vectorized ---
+    # blocks are allocated in chronological order per node, so sorting by
+    # (node, block id) yields each node's chain oldest->newest
+    page_table = np.full((n, max_pages), NULL, np.int32)
+    node_npages = g.nblocks[:n].astype(np.int32)
+    if nb:
+        bids = np.arange(nb, dtype=np.int64)
+        nodes = g.blk_node[:nb]
+        order = np.lexsort((bids, nodes))
+        sorted_nodes = nodes[order]
+        first_occ = np.searchsorted(sorted_nodes, np.arange(n))
+        pos_within = np.arange(nb) - first_occ[sorted_nodes]
+        col = node_npages[sorted_nodes] - 1 - pos_within  # newest first
+        page_table[sorted_nodes, col] = order.astype(np.int32)
+
+    nb_rows = max(nb, 1)   # keep one (empty) page row for clipped gathers
+    sizes = np.zeros(nb_rows, np.int32)
+    sizes[:nb] = g.blk_size[:nb]
+    starts = np.zeros(nb_rows, np.int64)
+    starts[:nb] = g.blk_start[:nb]
+    offl = np.zeros(nb_rows, bool)
+    offl[:nb] = g.blk_offloaded[:nb]
+
+    # --- padded per-page arena views, vectorized gather ---
+    lane = np.arange(page_cap)
+    idx = starts[:, None] + lane[None, :]
+    fill = (lane[None, :] < np.minimum(sizes, page_cap)[:, None]) \
+        & ~offl[:, None]
+    idx_c = np.clip(idx, 0, max(g.arena_used - 1, 0))
+    arena_nbr = g.nbr if g.arena_used else np.zeros(1, np.int64)
+    arena_eid = g.eid if g.arena_used else np.zeros(1, np.int64)
+    arena_ts = g.ts if g.arena_used else np.zeros(1, np.float64)
+    arena_val = g.valid if g.arena_used else np.zeros(1, bool)
+    nbr = np.where(fill, arena_nbr[idx_c], NULL).astype(np.int32)
+    eid = np.where(fill, arena_eid[idx_c], NULL).astype(np.int32)
+    ts = np.where(fill, arena_ts[idx_c], np.inf).astype(np.float32)
+    valid = fill & arena_val[idx_c]
+
+    tmin = np.full(nb_rows, np.inf, np.float32)
+    tmin[:nb] = g.blk_tmin[:nb]
+    tmax = np.full(nb_rows, -np.inf, np.float32)
+    tmax[:nb] = g.blk_tmax[:nb]
+    degree = np.zeros(n, np.int32)
+    degree[:g.n_nodes] = g.degree[:g.n_nodes]
+    return GraphSnapshot(
+        page_table=page_table,
+        node_npages=node_npages,
+        node_degree=degree,
+        page_size=sizes,
+        page_tmin=tmin,
+        page_tmax=tmax,
+        page_start=starts.astype(np.int32),
+        page_cap=int(page_cap),
+        nbr=nbr, eid=eid, ts=ts, valid=valid, n_pages=nb,
+    )
+
+
+def _gather_pages(g: DynamicGraph, page_ids: np.ndarray, page_cap: int):
+    """Padded (nbr, eid, ts, valid, size) rows for the given blocks."""
+    lane = np.arange(page_cap)
+    starts = g.blk_start[page_ids][:, None] + lane[None, :]
+    sizes = np.minimum(g.blk_size[page_ids], page_cap).astype(np.int32)
+    fill = (lane[None, :] < sizes[:, None]) \
+        & ~g.blk_offloaded[page_ids, None]
+    idx_c = np.clip(starts, 0, max(g.arena_used - 1, 0))
+    return (np.where(fill, g.nbr[idx_c], NULL).astype(np.int32),
+            np.where(fill, g.eid[idx_c], NULL).astype(np.int32),
+            np.where(fill, g.ts[idx_c], np.inf).astype(np.float32),
+            fill & g.valid[idx_c], sizes)
+
+
+def _rebuild_page_table(g: DynamicGraph, n: int, nb: int):
+    max_pages = max(int(g.nblocks[:n].max()) if n else 1, 1)
+    page_table = np.full((n, max_pages), NULL, np.int32)
+    npages = g.nblocks[:n].astype(np.int32)
+    if nb:
+        bids = np.arange(nb, dtype=np.int64)
+        nodes = g.blk_node[:nb]
+        order = np.lexsort((bids, nodes))
+        sorted_nodes = nodes[order]
+        first_occ = np.searchsorted(sorted_nodes, np.arange(n))
+        pos_within = np.arange(nb) - first_occ[sorted_nodes]
+        col = npages[sorted_nodes] - 1 - pos_within
+        page_table[sorted_nodes, col] = order.astype(np.int32)
+    return page_table, npages
+
+
+def refresh_snapshot(g: DynamicGraph, snap: GraphSnapshot
+                     ) -> GraphSnapshot:
+    """Incremental refresh: gather only NEW pages and re-copy pages whose
+    fill changed; the (small) page table / descriptor arrays are rebuilt
+    vectorized. Edge data of untouched pages is never re-read — the
+    paper's 'update without rebuild' property."""
+    n, nb = g.n_nodes, g.n_blocks
+    if nb and int(g.blk_cap[:nb].max()) > snap.page_cap:
+        return build_snapshot(g, page_cap=None)   # rare: tau changed
+
+    old_nb = snap.num_pages
+    # changed old pages (tail blocks that gained edges)
+    changed = np.nonzero(g.blk_size[:old_nb].astype(np.int32)
+                         != snap.page_size[:old_nb])[0]
+    if len(changed):
+        nbr, eid, ts, valid, sizes = _gather_pages(g, changed,
+                                                   snap.page_cap)
+        snap.nbr[changed] = nbr
+        snap.eid[changed] = eid
+        snap.ts[changed] = ts
+        snap.valid[changed] = valid
+        snap.page_size[changed] = sizes
+        snap.page_tmin[changed] = g.blk_tmin[changed]
+        snap.page_tmax[changed] = g.blk_tmax[changed]
+    # brand-new pages: gather once, append into slack capacity
+    if nb > old_nb:
+        cap_rows = len(snap.page_size)
+        if nb > cap_rows:
+            grow = max(int(cap_rows * 1.5), nb) - cap_rows
+            pad2 = lambda a, fill: np.concatenate(
+                [a, np.full((grow,) + a.shape[1:], fill, a.dtype)])
+            snap.nbr = pad2(snap.nbr, NULL)
+            snap.eid = pad2(snap.eid, NULL)
+            snap.ts = pad2(snap.ts, np.inf)
+            snap.valid = pad2(snap.valid, False)
+            snap.page_size = pad2(snap.page_size, 0)
+            snap.page_tmin = pad2(snap.page_tmin, np.inf)
+            snap.page_tmax = pad2(snap.page_tmax, -np.inf)
+            snap.page_start = pad2(snap.page_start, 0)
+        new_ids = np.arange(old_nb, nb)
+        nbr, eid, ts, valid, sizes = _gather_pages(g, new_ids,
+                                                   snap.page_cap)
+        snap.nbr[old_nb:nb] = nbr
+        snap.eid[old_nb:nb] = eid
+        snap.ts[old_nb:nb] = ts
+        snap.valid[old_nb:nb] = valid
+        snap.page_size[old_nb:nb] = sizes
+        snap.page_tmin[old_nb:nb] = g.blk_tmin[new_ids]
+        snap.page_tmax[old_nb:nb] = g.blk_tmax[new_ids]
+        snap.page_start[old_nb:nb] = g.blk_start[new_ids]
+    snap.n_pages = nb
+    # node-level tables: delta update (only nodes whose chains changed)
+    old_n = snap.num_nodes
+    width = snap.page_table.shape[1]
+    need_width = max(int(g.nblocks[:n].max()) if n else 1, 1)
+    if need_width > width:
+        snap.page_table = np.concatenate(
+            [snap.page_table,
+             np.full((old_n, max(need_width, int(width * 1.5)) - width),
+                     NULL, np.int32)], axis=1)
+        width = snap.page_table.shape[1]
+    if n > old_n:
+        snap.page_table = np.concatenate(
+            [snap.page_table,
+             np.full((n - old_n, width), NULL, np.int32)])
+        snap.node_npages = np.concatenate(
+            [snap.node_npages, np.zeros(n - old_n, np.int32)])
+    dirty = np.nonzero(g.nblocks[:old_n].astype(np.int32)
+                       != snap.node_npages[:old_n])[0]
+    if n > old_n:
+        dirty = np.concatenate([dirty, np.arange(old_n, n)])
+    if len(dirty):
+        dset = np.zeros(n, bool)
+        dset[dirty] = True
+        blk_sel = np.nonzero(dset[g.blk_node[:nb]])[0]
+        nodes = g.blk_node[blk_sel]
+        order = np.lexsort((blk_sel, nodes))
+        sorted_nodes = nodes[order]
+        uniq, first = np.unique(sorted_nodes, return_index=True)
+        pos_within = np.arange(len(blk_sel)) - first[
+            np.searchsorted(uniq, sorted_nodes)]
+        npg = g.nblocks[sorted_nodes]
+        col = (npg - 1 - pos_within).astype(np.int64)
+        snap.page_table[dirty] = NULL
+        snap.page_table[sorted_nodes, col] = blk_sel[order].astype(
+            np.int32)
+        snap.node_npages = g.nblocks[:n].astype(np.int32)
+    snap.node_degree = g.degree[:n].astype(np.int32)
+    # deletions flip validity without resizing: recopy validity lanes for
+    # all live pages — only when a deletion actually happened since the
+    # last snapshot (a full-arena pass would otherwise dominate refresh)
+    if getattr(g, "_deleted_since_snapshot", False):
+        lane = np.arange(snap.page_cap)
+        starts = g.blk_start[:nb][:, None] + lane[None, :]
+        fill = (lane[None, :] < np.minimum(g.blk_size[:nb],
+                                           snap.page_cap)[:, None]) \
+            & ~g.blk_offloaded[:nb, None]
+        idx_c = np.clip(starts, 0, max(g.arena_used - 1, 0))
+        snap.valid[:nb] = fill & g.valid[idx_c]
+        g._deleted_since_snapshot = False
+    return snap

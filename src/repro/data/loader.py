@@ -1,0 +1,52 @@
+"""Chronological mini-batching + negative sampling for link prediction."""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.data.events import EventStream
+
+
+def chronological_batches(stream: EventStream, batch_size: int,
+                          drop_last: bool = False
+                          ) -> Iterator[Tuple[np.ndarray, np.ndarray,
+                                              np.ndarray, np.ndarray]]:
+    """Yields (src, dst, ts, idx) in strict time order (paper §2.1)."""
+    n = len(stream)
+    for lo in range(0, n, batch_size):
+        hi = min(lo + batch_size, n)
+        if drop_last and hi - lo < batch_size:
+            return
+        yield (stream.src[lo:hi], stream.dst[lo:hi], stream.ts[lo:hi],
+               np.arange(lo, hi))
+
+
+def sample_negatives(stream: EventStream, n: int,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Uniform negative destinations (item side for bipartite graphs)."""
+    if stream.bipartite:
+        lo = stream.n_nodes // 2
+        return rng.integers(lo, stream.n_nodes, n)
+    return rng.integers(0, stream.n_nodes, n)
+
+
+def replay_mix(new: EventStream, history: Optional[EventStream],
+               replay_ratio: float, rng: np.random.Generator
+               ) -> EventStream:
+    """Experience replay (paper §2.1/[49]): mix a sample of historical
+    events into the finetuning set to fight catastrophic forgetting.
+    Returned stream is time-sorted."""
+    if history is None or replay_ratio <= 0 or len(history) == 0:
+        return new
+    n_replay = int(len(new) * replay_ratio)
+    idx = np.sort(rng.choice(len(history), min(n_replay, len(history)),
+                             replace=False))
+    import numpy as _np
+    src = _np.concatenate([history.src[idx], new.src])
+    dst = _np.concatenate([history.dst[idx], new.dst])
+    ts = _np.concatenate([history.ts[idx], new.ts])
+    order = _np.argsort(ts, kind="stable")
+    return EventStream(src[order], dst[order], ts[order], new.n_nodes,
+                       new.d_node, new.d_edge, new.bipartite, new.seed,
+                       new.n_communities)

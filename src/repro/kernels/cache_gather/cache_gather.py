@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused cache probe + feature gather (GNNFlow §4.3).
+
+One HBM pass per request tile: the precomputed slot index (scalar
+prefetch, it drives the BlockSpec index_map) selects the feature row to
+DMA into VMEM; the tag compare (slot id == requested id) masks the output
+in-register. The unfused jnp path reads the slot map, writes a slot
+tensor, re-reads it, then gathers — three HBM round-trips for the
+metadata; here the metadata ride along as scalars.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NULL = -1
+
+
+def _kernel(slots_ref, ids_ref,        # scalar prefetch: (N,), (N,)
+            slot_ids_ref,              # scalar prefetch: (C,)
+            feat_row_ref,              # (1, D) gathered row
+            out_ref, hit_ref,          # (1, D), (1, 1)
+            *, dim: int):
+    i = pl.program_id(0)
+    slot = slots_ref[i]
+    wanted = ids_ref[i]
+    slot_c = jnp.maximum(slot, 0)
+    hit = (wanted >= 0) & (slot >= 0) & (slot_ids_ref[slot_c] == wanted)
+    row = feat_row_ref[0, :]
+    out_ref[0, :] = jnp.where(hit, row, jnp.zeros_like(row))
+    hit_ref[0, 0] = hit.astype(jnp.int32)
+
+
+def cache_gather_kernel(slots, ids, slot_ids, feats, *,
+                        interpret: bool = True):
+    """slots: (N,) precomputed slot index per id; feats: (C, D)."""
+    N = slots.shape[0]
+    C, D = feats.shape
+
+    def feat_map(i, slots_, ids_, slot_ids_):
+        return (jnp.maximum(slots_[i], 0), 0)
+
+    def out_map(i, *_):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(N,),
+        in_specs=[pl.BlockSpec((1, D), feat_map)],
+        out_specs=[pl.BlockSpec((1, D), out_map),
+                   pl.BlockSpec((1, 1), out_map)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, dim=D),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((N, D), feats.dtype),
+                   jax.ShapeDtypeStruct((N, 1), jnp.int32)],
+        interpret=interpret,
+    )
+    out, hit = fn(slots, ids, slot_ids, feats)
+    return out, hit[:, 0] != 0

@@ -1,0 +1,19 @@
+"""jit wrapper: slot precompute (tiny gather) + fused Pallas probe+gather."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cache_gather.cache_gather import cache_gather_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_gather_pallas(slot_of, slot_ids, feats, ids, *,
+                        interpret: bool = True):
+    safe = jnp.clip(ids, 0, slot_of.shape[0] - 1)
+    slots = jnp.where(ids >= 0, slot_of[safe], -1).astype(jnp.int32)
+    return cache_gather_kernel(slots, ids.astype(jnp.int32),
+                               slot_ids.astype(jnp.int32), feats,
+                               interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the cache_gather kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NULL = -1
+
+
+def cache_gather_ref(slot_of, slot_ids, feats, ids):
+    """slot_of: (M,); slot_ids: (C,); feats: (C, D); ids: (N,).
+    Returns (out (N, D), hit (N,))."""
+    safe = jnp.clip(ids, 0, slot_of.shape[0] - 1)
+    slot = slot_of[safe]
+    slot_c = jnp.clip(slot, 0, slot_ids.shape[0] - 1)
+    hit = (ids >= 0) & (slot >= 0) & (slot_ids[slot_c] == ids)
+    out = jnp.where(hit[:, None], feats[slot_c], 0)
+    return out, hit

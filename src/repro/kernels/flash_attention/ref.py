@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash_attention kernel: masked GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s * (D ** -0.5)
+    if causal:
+        Skv = k.shape[1]
+        mask = (jnp.arange(Skv)[None, :]
+                > jnp.arange(Sq)[:, None] + (Skv - Sq))
+        s = jnp.where(mask[None, None, None], -1e30, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)

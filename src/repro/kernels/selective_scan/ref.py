@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the selective_scan kernel (mamba-1 recurrence)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def selective_scan_ref(dt, x, A, Bt, Ct, h0):
+    """dt, x: (B, L, Din); A: (Din, N); Bt, Ct: (B, L, N);
+    h0: (B, Din, N). Returns (y (B, L, Din) f32, h_last)."""
+    def step(h, ys):
+        dtt, xt, Bt_, Ct_ = ys
+        dA = jnp.exp(dtt[..., None] * A)
+        h = dA * h + (dtt * xt)[..., None] * Bt_[:, None, :]
+        y = jnp.einsum("bhn,bn->bh", h, Ct_)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (dt, x, Bt, Ct))
+    h_last, y = lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(y, 0, 1), h_last

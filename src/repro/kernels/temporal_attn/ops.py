@@ -1,0 +1,24 @@
+"""jit wrapper for the temporal_attn kernel (pads N to a tile multiple)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.temporal_attn.temporal_attn import temporal_attn_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def temporal_attn_pallas(q, k, v, mask, *, tile: int = 8,
+                         interpret: bool = True):
+    N = q.shape[0]
+    pad = (-N) % tile
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    out = temporal_attn_kernel(q, k, v, mask, tile=tile,
+                               interpret=interpret)
+    return out[:N]

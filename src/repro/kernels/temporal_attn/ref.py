@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the temporal_attn kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def temporal_attn_ref(q, k, v, mask):
+    """q: (N, H, Dh); k, v: (N, K, H, Dh); mask: (N, K) -> (N, H, Dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("nhd,nkhd->nhk", q, k) * (dh ** -0.5)
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    a = jnp.where(mask[:, None, :], a, 0.0)
+    return jnp.einsum("nhk,nkhd->nhd", a, v)

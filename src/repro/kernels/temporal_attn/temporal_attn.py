@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: masked neighborhood attention (GNN aggregation).
+
+The compute hot-spot fed by the temporal sampler: each target attends
+over its K sampled neighbors (K = fanout, small) — thousands of tiny
+attention problems. The kernel fuses mask + softmax + weighted sum for a
+TILE of targets per program, keeping the (TILE, H, K) score block in VMEM
+(the jnp path round-trips scores and normalized weights through HBM).
+
+Layout: q (N, H, Dh); k/v (N, K, H, Dh); mask (N, K). N is padded to a
+multiple of TILE by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, tile: int):
+    q = q_ref[...]                    # (T, H, Dh)
+    k = k_ref[...]                    # (T, K, H, Dh)
+    v = v_ref[...]
+    m = m_ref[...] != 0               # (T, K)
+    dh = q.shape[-1]
+    s = jnp.einsum("nhd,nkhd->nhk", q, k,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    s = jnp.where(m[:, None, :], s, -1e30)
+    smax = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - smax)
+    p = jnp.where(m[:, None, :], p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    a = (p / denom).astype(v.dtype)
+    o_ref[...] = jnp.einsum("nhk,nkhd->nhd", a, v,
+                            preferred_element_type=jnp.float32
+                            ).astype(o_ref.dtype)
+
+
+def temporal_attn_kernel(q, k, v, mask, *, tile: int = 8,
+                         interpret: bool = True):
+    N, H, Dh = q.shape
+    K = k.shape[1]
+    assert N % tile == 0, "caller pads N to a tile multiple"
+    grid = (N // tile,)
+
+    def tmap(i):
+        return (i, 0, 0)
+
+    def tmap4(i):
+        return (i, 0, 0, 0)
+
+    def mmap(i):
+        return (i, 0)
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, tile=tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, H, Dh), tmap),
+            pl.BlockSpec((tile, K, H, Dh), tmap4),
+            pl.BlockSpec((tile, K, H, Dh), tmap4),
+            pl.BlockSpec((tile, K), mmap),
+        ],
+        out_specs=pl.BlockSpec((tile, H, Dh), tmap),
+        out_shape=jax.ShapeDtypeStruct((N, H, Dh), q.dtype),
+        interpret=interpret,
+    )
+    return fn(q, k, v, mask.astype(jnp.int32))

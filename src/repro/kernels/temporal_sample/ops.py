@@ -1,0 +1,38 @@
+"""jit'd wrapper for the temporal_sample Pallas kernel with the same
+signature as the vectorized-jnp sampler hop."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.temporal_sample.temporal_sample import (
+    NULL, temporal_sample_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def temporal_sample_pallas(page_table_rows, page_tmin, page_tmax,
+                           pages_nbr, pages_eid, pages_ts, pages_valid,
+                           targets, t_end, t_start, tmask, *, k: int,
+                           interpret: bool = True):
+    """Gathers each target's page-table row then invokes the kernel.
+
+    page_table_rows: (N_nodes, S) — full table; targets: (N,).
+    Returns (nbr, eid, ts, mask) each (N, k), matching the jnp path.
+    """
+    in_range = (targets >= 0) & (targets < page_table_rows.shape[0])
+    safe_t = jnp.clip(targets, 0, page_table_rows.shape[0] - 1)
+    pt = jnp.where((tmask & in_range)[:, None],
+                   page_table_rows[safe_t], NULL).astype(jnp.int32)
+    tq = jnp.stack([t_start, t_end], axis=1).astype(jnp.float32)
+    nbr, eid, ts, cnt = temporal_sample_kernel(
+        pt, page_tmin.astype(jnp.float32), page_tmax.astype(jnp.float32),
+        pages_nbr.astype(jnp.int32), pages_eid.astype(jnp.int32),
+        pages_ts.astype(jnp.float32), pages_valid, tq,
+        tmask, k=k, interpret=interpret)
+    mask = jnp.arange(k)[None, :] < cnt[:, :1]
+    # counters are broadcast along k; slot-validity = slot index < count
+    mask = jnp.arange(k)[None, :] < cnt[:, 0:1]
+    return (jnp.where(mask, nbr, NULL), jnp.where(mask, eid, NULL),
+            jnp.where(mask, ts, 0.0), mask)

@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: paged temporal neighbor sampling, recent policy.
+
+GNNFlow Algorithm 1, re-derived for the TPU (DESIGN.md §2):
+  * the paper's warp-per-target traversal becomes one grid *program* per
+    target; the page loop is the second (minor, sequential) grid dim, so
+    per-target state (fill count, output tile) lives in VMEM/SMEM scratch
+    across page steps — the same pattern as a flash-attention KV loop;
+  * the paper's per-thread binary search inside a block becomes a masked
+    VPU compare over the page's 128-lane timestamp vector (a lane-parallel
+    "search" is one vector op);
+  * the paper's register-cached 72-byte block descriptor becomes the
+    scalar-prefetched page id + t_min/t_max scalars (SMEM), which also
+    drive the BlockSpec index_map — pages whose window misses are still
+    DMA'd (block shapes are static) but skipped in compute, matching the
+    paper's "skip blocks outside the range" control flow at the memory
+    level available on TPU.
+
+Layout: pages_* are (P, C) with C = page_cap (lane-padded); lanes are
+oldest-first within a page, pages arrive newest-first via the page table.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NULL = -1
+
+
+def _kernel(page_ids_ref,            # scalar prefetch: (N, S) int32
+            tmin_ref, tmax_ref,      # scalar prefetch: (P,) f32
+            # inputs (blocked):
+            nbr_ref, eid_ref, ts_ref, val_ref,   # (1, C) page row
+            tq_ref,                  # (1, 2) [t_start, t_end] for target
+            msk_ref,                 # (1, 1) target mask
+            # outputs:
+            out_nbr_ref, out_eid_ref, out_ts_ref, out_cnt_ref,  # (1, K)
+            *, k: int, page_cap: int, scan_pages: int):
+    i = pl.program_id(0)             # target index
+    j = pl.program_id(1)             # page step (newest-first)
+
+    @pl.when(j == 0)
+    def _init():
+        out_nbr_ref[...] = jnp.full((1, k), NULL, jnp.int32)
+        out_eid_ref[...] = jnp.full((1, k), NULL, jnp.int32)
+        out_ts_ref[...] = jnp.zeros((1, k), jnp.float32)
+        out_cnt_ref[...] = jnp.zeros((1, k), jnp.int32)
+
+    count = out_cnt_ref[0, 0]
+    t_start = tq_ref[0, 0]
+    t_end = tq_ref[0, 1]
+    pid = page_ids_ref[i, j]
+    alive = (pid != NULL) & (msk_ref[0, 0] != 0) & (count < k)
+    # block descriptor check (the paper's t_min/t_max skip)
+    pid_c = jnp.maximum(pid, 0)
+    hit = alive & (tmin_ref[pid_c] < t_end) & (tmax_ref[pid_c] >= t_start)
+
+    @pl.when(hit)
+    def _scan_page():
+        ts_row = ts_ref[0, :]                      # (C,) oldest-first
+        val_row = val_ref[0, :] != 0
+        in_win = val_row & (ts_row >= t_start) & (ts_row < t_end)
+        # newest-first lane order (jnp.flip: Pallas refs reject step=-1)
+        rev = jnp.flip(in_win)
+        ts_rev = jnp.flip(ts_row)
+        nbr_rev = jnp.flip(nbr_ref[0, :])
+        eid_rev = jnp.flip(eid_ref[0, :])
+        # rank of each newest-first candidate in the global output
+        rank = count + jnp.cumsum(rev.astype(jnp.int32)) - 1
+        rank = jnp.where(rev, rank, -1)
+        # scatter into the K output slots via a (K, C) selection mask,
+        # reduced with max (exactly one lane per slot)
+        sel = rank[None, :] == jnp.arange(k, dtype=jnp.int32)[:, None]
+        pick = lambda row, fill: jnp.max(
+            jnp.where(sel, row[None, :], fill), axis=1)
+        new_nbr = pick(nbr_rev, NULL)
+        new_eid = pick(eid_rev, NULL)
+        new_ts = pick(ts_rev, -jnp.inf)
+        got = jnp.any(sel, axis=1)
+        out_nbr_ref[0, :] = jnp.where(got, new_nbr, out_nbr_ref[0, :])
+        out_eid_ref[0, :] = jnp.where(got, new_eid, out_eid_ref[0, :])
+        out_ts_ref[0, :] = jnp.where(got, new_ts.astype(jnp.float32),
+                                     out_ts_ref[0, :])
+        n_new = jnp.sum(rev.astype(jnp.int32))
+        out_cnt_ref[...] = jnp.minimum(count + n_new,
+                                       k).astype(jnp.int32)[None, None
+                                                            ] * jnp.ones(
+            (1, k), jnp.int32)
+
+
+def temporal_sample_kernel(page_table, page_tmin, page_tmax, pages_nbr,
+                           pages_eid, pages_ts, pages_valid, t_query,
+                           tmask, *, k: int, interpret: bool = True):
+    """page_table: (N, S) newest-first page ids; pages_*: (P, C);
+    t_query: (N, 2) [t_start, t_end]; tmask: (N,) int32.
+    Returns (nbr, eid, ts, cnt) each (N, k) / cnt (N, k) fill counters."""
+    N, S = page_table.shape
+    P, C = pages_ts.shape
+    grid = (N, S)
+
+    def page_map(i, j, page_ids, tmin, tmax):
+        return (jnp.maximum(page_ids[i, j], 0), 0)
+
+    def tq_map(i, j, *_):
+        return (i, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, C), page_map),   # nbr
+        pl.BlockSpec((1, C), page_map),   # eid
+        pl.BlockSpec((1, C), page_map),   # ts
+        pl.BlockSpec((1, C), page_map),   # valid
+        pl.BlockSpec((1, 2), tq_map),     # t_query
+        pl.BlockSpec((1, 1), tq_map),     # tmask
+    ]
+    out_specs = [
+        pl.BlockSpec((1, k), tq_map),
+        pl.BlockSpec((1, k), tq_map),
+        pl.BlockSpec((1, k), tq_map),
+        pl.BlockSpec((1, k), tq_map),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((N, k), jnp.int32),
+        jax.ShapeDtypeStruct((N, k), jnp.int32),
+        jax.ShapeDtypeStruct((N, k), jnp.float32),
+        jax.ShapeDtypeStruct((N, k), jnp.int32),
+    ]
+    grid_spec = pl.GridSpec(grid=grid, in_specs=in_specs,
+                            out_specs=out_specs)
+    kern = functools.partial(_kernel, k=k, page_cap=C, scan_pages=S)
+    fn = pl.pallas_call(
+        kern,
+        grid_spec=pltpu_prefetch(grid, in_specs, out_specs, n_prefetch=3),
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(page_table, page_tmin, page_tmax,
+              pages_nbr, pages_eid, pages_ts,
+              pages_valid.astype(jnp.int32), t_query,
+              tmask.astype(jnp.int32).reshape(N, 1))
+
+
+def pltpu_prefetch(grid, in_specs, out_specs, n_prefetch):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=n_prefetch, grid=grid, in_specs=in_specs,
+        out_specs=out_specs)

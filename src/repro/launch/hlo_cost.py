@@ -1,0 +1,447 @@
+"""HLO-text cost model with while-loop trip-count scaling.
+
+Why this exists: ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+but our models scan over layers (and scan inside scan for chunked SSMs), so
+its FLOP/byte numbers undercount by ~n_layers x. This parser walks the
+optimized (post-SPMD) HLO text, computes per-computation costs, and scales
+each computation by its execution count derived from the
+``known_trip_count`` backend_config on while ops (validated against
+analytic FLOPs in tests).
+
+All shapes in an SPMD module are PER-PARTITION, so every number returned
+here is per-chip. Costs:
+  * flops            — 2 * prod(result dims) * prod(contracting dims) per
+                       dot; convolutions are rejected loudly (we don't emit
+                       any).
+  * bytes            — op-aware HBM-traffic model over ops in executable
+                       computations (fusion interiors excluded; the fusion
+                       call-site op carries its operands/result):
+                         - tuple/get-tuple-element/bitcast/parameter/
+                           constant/after-all: free (no data movement)
+                         - dynamic-update-slice: 2 x update bytes (in-place)
+                         - dynamic-slice / copy: 2 x result bytes
+                         - gather: 2 x result + indices (reads rows, not
+                           the whole table); scatter: 2 x updates + indices
+                         - everything else: result + operands, minus the
+                           largest operand that matches the result shape
+                           (XLA aliases one input in-place for fusions and
+                           elementwise chains; without this discount a
+                           scanned KV-cache pass-through counts ~100x)
+  * collective_bytes — on-wire bytes per chip: all-gather/all-to-all/
+                       collective-permute = result bytes; reduce-scatter =
+                       operand bytes; all-reduce = 2x result bytes (ring
+                       reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2,
+    "f32": 4, "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s+\(")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    result_bytes: int
+    operand_bytes: int
+    flops: float
+    collective_bytes: float
+    result_shapes: List[Tuple[str, str]] = field(default_factory=list)
+    operand_shape_lists: List[List[Tuple[str, str]]] = \
+        field(default_factory=list)
+    operand_bytes_each: List[int] = field(default_factory=list)
+    callees: List[str] = field(default_factory=list)
+    fusion_callees: List[str] = field(default_factory=list)
+    trip: Optional[int] = None
+
+
+_FREE_OPS = frozenset((
+    "tuple", "get-tuple-element", "bitcast", "after-all", "partition-id",
+    "replica-id", "opt-barrier", "add-dependency", "domain",
+    # control-flow ops are charged via their body computations:
+    "while", "conditional", "call",
+    # XLA:CPU inserts defensive whole-buffer copies for while-loop carries
+    # (KV caches!) that the TPU compiler elides via in-place buffer
+    # assignment; charging them would bill decode for a full cache copy
+    # per layer. Treated as free for the TPU target.
+    "copy", "copy-start", "copy-done",
+))
+
+
+def _is_upcast(op: "OpInfo") -> bool:
+    """bf16->f32 widening with unchanged element count: an XLA:CPU artifact
+    (CPU computes bf16 as f32); on TPU upcasts fuse into their consumer."""
+    if len(op.operand_shape_lists) != 1 or len(op.result_shapes) != 1:
+        return False
+    if len(op.operand_shape_lists[0]) != 1:
+        return False
+    rd, rs = op.result_shapes[0]
+    od, os_ = op.operand_shape_lists[0][0]
+    return (rs == os_ and _DTYPE_BYTES.get(rd, 4) >
+            _DTYPE_BYTES.get(od, 4))
+
+
+def _mem_traffic(op: "OpInfo", dus_bytes_of: Dict[str, float]) -> float:
+    opcode = op.opcode
+    result_bytes = op.result_bytes
+    operand_bytes_each = op.operand_bytes_each
+    if opcode in _FREE_OPS:
+        return 0.0
+    if opcode in ("convert", "fusion") and _is_upcast(op):
+        return 0.0
+    if opcode == "dynamic-update-slice":
+        upd = operand_bytes_each[1] if len(operand_bytes_each) > 1 else 0
+        return 2.0 * upd
+    if opcode in ("dynamic-slice", "slice", "reshape", "transpose",
+                  "broadcast", "iota"):
+        return 2.0 * result_bytes
+    if opcode == "gather":
+        idx = operand_bytes_each[1] if len(operand_bytes_each) > 1 else 0
+        return 2.0 * result_bytes + idx
+    if opcode == "scatter":
+        upd = operand_bytes_each[2] if len(operand_bytes_each) > 2 else 0
+        idx = operand_bytes_each[1] if len(operand_bytes_each) > 1 else 0
+        return 2.0 * upd + idx
+
+    result_key = sorted(op.result_shapes)
+    pass_through = 0
+    for lst, b in zip(op.operand_shape_lists, operand_bytes_each):
+        if sorted(lst) == result_key and b > pass_through:
+            pass_through = b
+
+    if opcode == "fusion" and op.fusion_callees:
+        callee = op.fusion_callees[0]
+        dus = dus_bytes_of.get(callee, (0.0, 0.0))[0]
+        ds = dus_bytes_of.get(callee, (0.0, 0.0))[1]
+        if dus > 0 and pass_through > 0:
+            # in-place cache-update fusion: the big buffer passes through
+            # untouched except for the DUS region; charge the region and
+            # the (slice-capped) side inputs only.
+            others = sum(min(b, max(ds, dus))
+                         for lst, b in zip(op.operand_shape_lists,
+                                           operand_bytes_each)
+                         if sorted(lst) != result_key)
+            return dus + others
+        if ds > 0:
+            # fusion reads slices of big operands (per-layer weight/cache
+            # slices out of scan-stacked buffers): cap each oversized
+            # operand at the slice traffic actually read.
+            total = float(result_bytes)
+            for lst, b in zip(op.operand_shape_lists, operand_bytes_each):
+                if sorted(lst) == result_key and b == pass_through:
+                    continue
+                if b > 4 * result_bytes:
+                    b = min(b, ds + 2.0 * result_bytes)
+                total += b
+            return total
+
+    total = float(result_bytes + sum(operand_bytes_each))
+    # in-place aliasing discount: drop the largest operand with the same
+    # shape as the result (fusion pass-through / elementwise in-place)
+    return total - pass_through
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    ops: int = 0
+    dus_update_bytes: float = 0.0   # 2x update bytes of DUS ops inside
+    ds_result_bytes: float = 0.0    # result bytes of dynamic-slices inside
+    # (callee, multiplier, is_fusion_interior)
+    calls: List[Tuple[str, float, bool]] = field(default_factory=list)
+    op_list: List[OpInfo] = field(default_factory=list)
+
+
+def _parse_op_line(line: str, symtab: Dict[str, List[Tuple[str, str]]]
+                   ) -> Optional[OpInfo]:
+    """Parse one op line. `symtab` maps op name -> result shape list and is
+    updated for every line (including parameters/constants) so operand
+    shapes can be resolved by name."""
+    line = _COMMENT_RE.sub("", line).rstrip()
+    stripped = line.lstrip()
+    if stripped.startswith("ROOT "):
+        stripped = stripped[5:]
+    if not stripped.startswith("%") or " = " not in stripped:
+        return None
+    name_part, rest = stripped.split(" = ", 1)
+    name = name_part.lstrip("%").strip()
+
+    # result type: either a parenthesized tuple or a single token
+    rest = rest.lstrip()
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        result_part, rest = rest[:end + 1], rest[end + 1:]
+    else:
+        sp = rest.index(" ") if " " in rest else len(rest)
+        result_part, rest = rest[:sp], rest[sp:]
+    result_shapes = _SHAPE_RE.findall(result_part)
+    symtab[name] = result_shapes
+    result_bytes = sum(_shape_bytes(d, s) for d, s in result_shapes)
+
+    rest = rest.lstrip()
+    p = rest.find("(")
+    if p < 0:
+        return None
+    opcode = rest[:p].strip()
+    if opcode in ("parameter", "constant"):
+        return None
+
+    # operands: inside the top-level parens after opcode
+    depth, end = 0, len(rest)
+    for i in range(p, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operand_part = rest[p:end + 1]
+    attr_part = rest[end + 1:]
+
+    operand_shape_lists: List[List[Tuple[str, str]]] = []
+    for nm in _NAME_RE.findall(operand_part):
+        operand_shape_lists.append(symtab.get(nm, []))
+    inline = _SHAPE_RE.findall(operand_part)
+    if not any(operand_shape_lists) and inline:
+        operand_shape_lists = [[s] for s in inline]
+    operand_bytes_each = [sum(_shape_bytes(d, s) for d, s in lst)
+                          for lst in operand_shape_lists]
+    operand_bytes = sum(operand_bytes_each)
+
+    flops = 0.0
+    if opcode == "dot":
+        cm = _CONTRACT_RE.search(attr_part)
+        contract = 1
+        lhs = operand_shape_lists[0] if operand_shape_lists else []
+        if cm and lhs:
+            lhs_dims = lhs[0][1].split(",") if lhs[0][1] else []
+            for idx in (cm.group(1).split(",") if cm.group(1) else []):
+                contract *= int(lhs_dims[int(idx)])
+        out_elems = sum(_shape_elems(s) for _, s in result_shapes)
+        flops = 2.0 * out_elems * contract
+    elif opcode == "convolution":
+        raise ValueError(
+            "convolution op found in HLO — the cost parser does not model "
+            "it; switch the model to shift-add convs or extend the parser")
+
+    coll = 0.0
+    if opcode in _COLLECTIVES:
+        if opcode == "all-reduce":
+            coll = 2.0 * result_bytes
+        elif opcode == "reduce-scatter":
+            coll = float(operand_bytes)
+        else:
+            coll = float(result_bytes)
+
+    callees, fusion_callees = [], []
+    for cal in _CALL_ATTR_RE.finditer(attr_part):
+        callees.append(cal.group(1))
+    bm = _BRANCHES_RE.search(attr_part)
+    if bm:
+        for b in bm.group(1).split(","):
+            callees.append(b.strip().lstrip("%"))
+    if opcode == "fusion":
+        fusion_callees, callees = callees, []
+    elif opcode in ("reduce", "reduce-window", "scatter", "sort", "map",
+                    "select-and-scatter", "all-reduce", "reduce-scatter"):
+        # to_apply regions are scalar lambdas — negligible, don't recurse
+        callees = []
+
+    trip = None
+    tm = _TRIP_RE.search(attr_part)
+    if tm:
+        trip = int(tm.group(1))
+
+    return OpInfo(name=name, opcode=opcode, result_bytes=result_bytes,
+                  operand_bytes=operand_bytes, flops=flops,
+                  collective_bytes=coll, result_shapes=result_shapes,
+                  operand_shape_lists=operand_shape_lists,
+                  operand_bytes_each=operand_bytes_each, callees=callees,
+                  fusion_callees=fusion_callees, trip=trip)
+
+
+def parse_hlo(text: str) -> Dict[str, CompCost]:
+    """Parse computations -> raw (unscaled) per-computation costs."""
+    comps: Dict[str, CompCost] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    symtab: Dict[str, List[Tuple[str, str]]] = {}
+    for line in text.splitlines():
+        is_hdr = (not line[:1].isspace() and line.rstrip().endswith("{"))
+        hdr = _COMP_HDR_RE.match(line) if is_hdr else None
+        if hdr:
+            cur = hdr.group(2)
+            comps[cur] = CompCost()
+            symtab = {}
+            if hdr.group(1):
+                entry = cur
+            continue
+        if cur is None or not line.strip() or line.strip() == "}":
+            continue
+        op = _parse_op_line(line, symtab)
+        if op is None:
+            continue
+        c = comps[cur]
+        c.ops += 1
+        c.flops += op.flops
+        c.coll_bytes += op.collective_bytes
+        c.op_list.append(op)
+        if op.opcode == "dynamic-update-slice":
+            upd = (op.operand_bytes_each[1]
+                   if len(op.operand_bytes_each) > 1 else 0)
+            c.dus_update_bytes += 2.0 * upd
+        elif op.opcode in ("dynamic-slice", "gather"):
+            c.ds_result_bytes += float(op.result_bytes)
+        if op.opcode == "while":
+            trip = float(op.trip if op.trip is not None else 1)
+            for callee in op.callees:
+                c.calls.append((callee, trip, False))
+        else:
+            for callee in op.callees:
+                c.calls.append((callee, 1.0, False))
+            for callee in op.fusion_callees:
+                c.calls.append((callee, 1.0, True))
+
+    # pass 2: memory traffic (needs the DUS/DS map across computations)
+    dus_bytes_of = {n: (c.dus_update_bytes, c.ds_result_bytes)
+                    for n, c in comps.items()}
+    for c in comps.values():
+        c.bytes = sum(_mem_traffic(op, dus_bytes_of) for op in c.op_list)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def total_cost(text: str) -> Dict[str, float]:
+    """Scaled per-chip totals for the module."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    memo: Dict[Tuple[int, bool], Tuple[float, float, float]] = {}
+
+    def walk(comp: CompCost, fusion_interior: bool,
+             depth: int = 0) -> Tuple[float, float, float]:
+        if depth > 64:
+            raise RecursionError("computation call graph too deep")
+        key = (id(comp), fusion_interior)
+        if key in memo:
+            return memo[key]
+        # fusion interiors: count dot flops only (bytes live at call site)
+        flops = comp.flops
+        bts = 0.0 if fusion_interior else comp.bytes
+        coll = 0.0 if fusion_interior else comp.coll_bytes
+        for callee, mult, is_fus in comp.calls:
+            sub = comps.get(callee)
+            if sub is None:
+                continue
+            f, b, cb = walk(sub, fusion_interior or is_fus, depth + 1)
+            flops += mult * f
+            bts += mult * b
+            coll += mult * cb
+        memo[key] = (flops, bts, coll)
+        return memo[key]
+
+    flops, bts, coll = walk(entry, False)
+    return {"flops": flops, "bytes": bts, "collective_bytes": coll}
+
+
+def collective_breakdown(text: str) -> List[Dict]:
+    """Scaled per-op collective summary (for the perf log)."""
+    comps = parse_hlo(text)
+    # compute multiplier per computation
+    mult: Dict[str, float] = {}
+    entry_name = None
+    for name, c in comps.items():
+        if name == "__entry__":
+            continue
+    # find entry by identity
+    entry = comps.get("__entry__")
+
+    def spread(comp: CompCost, m: float, seen: Tuple[str, ...] = ()):
+        for callee, k, is_fus in comp.calls:
+            if callee in seen:
+                continue
+            if callee in comps:
+                mult[callee] = mult.get(callee, 0.0) + m * k
+                spread(comps[callee], m * k, seen + (callee,))
+
+    for name, c in comps.items():
+        if c is entry and name != "__entry__":
+            entry_name = name
+    mult[entry_name] = 1.0
+    spread(entry, 1.0)
+
+    out: List[Dict] = []
+    cur = None
+    symtab: Dict[str, List[Tuple[str, str]]] = {}
+    for line in text.splitlines():
+        is_hdr = (not line[:1].isspace() and line.rstrip().endswith("{"))
+        hdr = _COMP_HDR_RE.match(line) if is_hdr else None
+        if hdr:
+            cur = hdr.group(2)
+            symtab = {}
+            continue
+        if cur is None:
+            continue
+        op = _parse_op_line(line, symtab) if line.strip() else None
+        if op is not None and op.collective_bytes > 0:
+            m = mult.get(cur, 0.0)
+            out.append({
+                "computation": cur, "op": op.opcode, "name": op.name,
+                "bytes_once": op.collective_bytes, "multiplier": m,
+                "bytes_scaled": op.collective_bytes * m,
+            })
+    out.sort(key=lambda d: -d["bytes_scaled"])
+    return out

@@ -1,0 +1,308 @@
+"""Temporal & static GNN models over sampled neighborhoods (GNNFlow §2.1).
+
+All models consume mask-padded fixed-fanout neighborhoods (the sampler's
+``SampledLayer`` views, assembled into feature tensors by
+``repro.core.mfg.assemble``), so every forward/backward is one static jit.
+
+Models (paper §6): TGN (node memory + temporal attention), TGAT (temporal
+attention, uniform sampling), DySAT (structural attention per time window
++ temporal self-attention across windows), GraphSAGE, GAT.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.tgn_gdelt import GNNConfig
+from repro.models.layers import dense_init, time_encode, time_encode_params
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Temporal graph attention layer (TGAT eq. 5-7; TGN uses the same block)
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer_init(key, d_in_dst, d_in_nbr, d_edge, d_time, d_out,
+                     n_heads):
+    ks = jax.random.split(key, 5)
+    d_q = d_in_dst + d_time
+    d_kv = d_in_nbr + d_edge + d_time
+    return {
+        "wq": dense_init(ks[0], (d_q, d_out)),
+        "wk": dense_init(ks[1], (d_kv, d_out)),
+        "wv": dense_init(ks[2], (d_kv, d_out)),
+        "w_out1": dense_init(ks[3], (d_out + d_in_dst, d_out)),
+        "w_out2": dense_init(ks[4], (d_out, d_out)),
+        "b_out1": jnp.zeros((d_out,), jnp.float32),
+        "b_out2": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def temporal_attn_layer(p: dict, h_dst: jnp.ndarray, h_nbr: jnp.ndarray,
+                        e_feat: jnp.ndarray, dt: jnp.ndarray,
+                        mask: jnp.ndarray, te: dict, n_heads: int,
+                        use_pallas: bool = False) -> jnp.ndarray:
+    """h_dst: (N, d_dst); h_nbr: (N, K, d_nbr); e_feat: (N, K, de);
+    dt: (N, K) (>=0); mask: (N, K). Returns (N, d_out)."""
+    N, K, _ = h_nbr.shape
+    phi0 = time_encode(jnp.zeros((N,), jnp.float32), te["w"], te["b"])
+    phid = time_encode(dt, te["w"], te["b"])                # (N, K, dt)
+    q_in = jnp.concatenate([h_dst, phi0], axis=-1)
+    kv_in = jnp.concatenate([h_nbr, e_feat, phid], axis=-1)
+
+    d_out = p["wq"].shape[1]
+    dh = d_out // n_heads
+    q = (q_in @ p["wq"]).reshape(N, n_heads, dh)
+    k = (kv_in @ p["wk"]).reshape(N, K, n_heads, dh)
+    v = (kv_in @ p["wv"]).reshape(N, K, n_heads, dh)
+
+    if use_pallas:
+        from repro.kernels.temporal_attn.ops import temporal_attn_pallas
+        attn = temporal_attn_pallas(q, k, v, mask)
+    else:
+        s = jnp.einsum("nhd,nkhd->nhk", q, k) * (dh ** -0.5)
+        s = jnp.where(mask[:, None, :], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        a = jnp.where(mask[:, None, :], a, 0.0)   # rows w/o neighbors -> 0
+        attn = jnp.einsum("nhk,nkhd->nhd", a, v)
+    attn = attn.reshape(N, d_out)
+
+    hcat = jnp.concatenate([attn, h_dst], axis=-1)
+    out = jax.nn.relu(hcat @ p["w_out1"] + p["b_out1"])
+    return out @ p["w_out2"] + p["b_out2"]
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE / GAT layers (static GNNs; same padded-neighborhood layout)
+# ---------------------------------------------------------------------------
+
+
+def _sage_layer_init(key, d_in_dst, d_in_nbr, d_out):
+    k1, k2 = jax.random.split(key)
+    return {"w_self": dense_init(k1, (d_in_dst, d_out)),
+            "w_nbr": dense_init(k2, (d_in_nbr, d_out)),
+            "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def sage_layer(p, h_dst, h_nbr, mask):
+    denom = jnp.maximum(mask.sum(-1, keepdims=True), 1)
+    mean = (h_nbr * mask[..., None]).sum(1) / denom
+    return jax.nn.relu(h_dst @ p["w_self"] + mean @ p["w_nbr"] + p["b"])
+
+
+def _gat_layer_init(key, d_in_dst, d_in_nbr, d_out, n_heads):
+    ks = jax.random.split(key, 4)
+    dh = d_out // n_heads
+    return {"w_dst": dense_init(ks[0], (d_in_dst, d_out)),
+            "w_nbr": dense_init(ks[1], (d_in_nbr, d_out)),
+            "a_dst": dense_init(ks[2], (n_heads, dh)),
+            "a_nbr": dense_init(ks[3], (n_heads, dh))}
+
+
+def gat_layer(p, h_dst, h_nbr, mask, n_heads):
+    N, K, _ = h_nbr.shape
+    d_out = p["w_dst"].shape[1]
+    dh = d_out // n_heads
+    zd = (h_dst @ p["w_dst"]).reshape(N, n_heads, dh)
+    zn = (h_nbr @ p["w_nbr"]).reshape(N, K, n_heads, dh)
+    s = (jnp.einsum("nhd,hd->nh", zd, p["a_dst"])[:, None, :]
+         + jnp.einsum("nkhd,hd->nkh", zn, p["a_nbr"]))
+    s = jax.nn.leaky_relu(s, 0.2)
+    s = jnp.where(mask[..., None], s, -1e30)
+    a = jax.nn.softmax(s, axis=1)
+    a = jnp.where(mask[..., None], a, 0.0)
+    out = jnp.einsum("nkh,nkhd->nhd", a, zn).reshape(N, d_out)
+    return jax.nn.elu(out)
+
+
+# ---------------------------------------------------------------------------
+# Model bundles: init(cfg) + embed(params, batch) -> seed embeddings
+#
+# `batch` layout (from repro.core.mfg.assemble), L = len(fanouts) hops:
+#   batch["hops"][l]: dict(nbr_feat (Nl, Kl, dn), edge_feat (Nl, Kl, de),
+#                          dt (Nl, Kl), mask (Nl, Kl), dst_feat (Nl, dn))
+#   hop l's targets are hop l-1's flattened neighbors; hop 0's targets are
+#   the seeds. For TGN, dst_feat/nbr_feat already include memory rows.
+# ---------------------------------------------------------------------------
+
+
+def _feat_dims(cfg: GNNConfig) -> Tuple[int, int]:
+    d_node_in = cfg.d_node + (cfg.d_memory if cfg.use_memory else 0)
+    return d_node_in, cfg.d_edge
+
+
+def init_gnn(cfg: GNNConfig, key: jax.Array) -> PyTree:
+    L = cfg.n_layers
+    d_node_in, d_edge = _feat_dims(cfg)
+    ks = jax.random.split(key, L + 3)
+    params: Dict[str, Any] = {"te": time_encode_params(ks[0], cfg.d_time)}
+    layers = []
+    for l in range(L):
+        # hop l's dst input is always the node's RAW features (identity
+        # frontier, TGL-style); its nbr input is the deeper hop's output
+        # except at the deepest hop, which sees raw neighbor features.
+        d_in_dst = d_node_in
+        d_in_nbr = d_node_in if l == L - 1 else cfg.d_hidden
+        if cfg.model in ("tgn", "tgat", "dysat"):
+            layers.append(_attn_layer_init(
+                ks[l + 1], d_in_dst, d_in_nbr, d_edge, cfg.d_time,
+                cfg.d_hidden, cfg.n_heads))
+        elif cfg.model == "graphsage":
+            layers.append(_sage_layer_init(ks[l + 1], d_in_dst, d_in_nbr,
+                                           cfg.d_hidden))
+        else:  # gat
+            layers.append(_gat_layer_init(ks[l + 1], d_in_dst, d_in_nbr,
+                                          cfg.d_hidden, cfg.n_heads))
+    params["layers"] = layers
+    if cfg.model == "dysat":
+        # temporal self-attention across snapshot embeddings
+        kq, kk = jax.random.split(ks[L + 1])
+        params["temp_attn"] = {
+            "wq": dense_init(kq, (cfg.d_hidden, cfg.d_hidden)),
+            "wk": dense_init(kk, (cfg.d_hidden, cfg.d_hidden)),
+            "wv": dense_init(ks[L + 2], (cfg.d_hidden, cfg.d_hidden)),
+        }
+    return params
+
+
+def gnn_embed(params: PyTree, cfg: GNNConfig, hops: List[dict],
+              use_pallas: bool = False) -> jnp.ndarray:
+    """Bottom-up recursion over L hops -> seed embeddings (N0, d_hidden).
+
+    hops[l]["dst_feat"]: (Nl, d_in), ["nbr_feat"]: (Nl, Kl, d_in), etc.
+    """
+    L = cfg.n_layers
+    # deepest hop first: h for hop L-1 targets from raw neighbor feats
+    h_nbr: Optional[jnp.ndarray] = None
+    for l in reversed(range(L)):
+        hop = hops[l]
+        dst = hop["dst_feat"]
+        nbr = hop["nbr_feat"] if h_nbr is None else h_nbr
+        if cfg.model in ("tgn", "tgat", "dysat"):
+            h = temporal_attn_layer(
+                params["layers"][l], dst, nbr, hop["edge_feat"],
+                hop["dt"], hop["mask"], params["te"], cfg.n_heads,
+                use_pallas=use_pallas)
+        elif cfg.model == "graphsage":
+            h = sage_layer(params["layers"][l], dst, nbr, hop["mask"])
+        else:
+            h = gat_layer(params["layers"][l], dst, nbr, hop["mask"],
+                          cfg.n_heads)
+        if l > 0:
+            Np, Kp = hops[l - 1]["mask"].shape
+            h_nbr = h.reshape(Np, Kp, -1)
+    return h
+
+
+def dysat_embed(params: PyTree, cfg: GNNConfig,
+                snapshots: List[List[dict]]) -> jnp.ndarray:
+    """DySAT: structural embedding per time-window snapshot + temporal
+    self-attention across the snapshot axis (newest last)."""
+    embs = [gnn_embed(params, cfg, hops) for hops in snapshots]
+    H = jnp.stack(embs, axis=1)                  # (N, T, d)
+    ta = params["temp_attn"]
+    q = H @ ta["wq"]
+    k = H @ ta["wk"]
+    v = H @ ta["wv"]
+    s = jnp.einsum("ntd,nsd->nts", q, k) / (H.shape[-1] ** 0.5)
+    # causal across snapshots: window t attends to windows <= t
+    T = H.shape[1]
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    s = jnp.where(causal[None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("nts,nsd->ntd", a, v)
+    return out[:, -1]                            # newest snapshot's view
+
+
+# ---------------------------------------------------------------------------
+# TGN node memory (message -> last-aggregation -> GRU)
+# ---------------------------------------------------------------------------
+
+
+def init_memory_module(cfg: GNNConfig, key: jax.Array) -> PyTree:
+    d_msg = 2 * cfg.d_memory + cfg.d_time + cfg.d_edge
+    ks = jax.random.split(key, 4)
+    dm = cfg.d_memory
+    return {
+        "te": time_encode_params(ks[0], cfg.d_time),
+        # GRU: z, r, n gates over [msg, mem]
+        "w_z": dense_init(ks[1], (d_msg + dm, dm)),
+        "w_r": dense_init(ks[2], (d_msg + dm, dm)),
+        "w_n": dense_init(ks[3], (d_msg + dm, dm)),
+        "b_z": jnp.zeros((dm,)), "b_r": jnp.zeros((dm,)),
+        "b_n": jnp.zeros((dm,)),
+    }
+
+
+def _gru(p, msg, mem):
+    x = jnp.concatenate([msg, mem], axis=-1)
+    z = jax.nn.sigmoid(x @ p["w_z"] + p["b_z"])
+    r = jax.nn.sigmoid(x @ p["w_r"] + p["b_r"])
+    xn = jnp.concatenate([msg, r * mem], axis=-1)
+    n = jnp.tanh(xn @ p["w_n"] + p["b_n"])
+    return (1 - z) * mem + z * n
+
+
+@functools.partial(jax.jit, static_argnames=())
+def memory_batch_update(mp: PyTree, nodes: jnp.ndarray,
+                        mem: jnp.ndarray, last_upd: jnp.ndarray,
+                        other_mem: jnp.ndarray, e_feat: jnp.ndarray,
+                        t: jnp.ndarray):
+    """Compute updated memories for `nodes` given one event each.
+
+    Events must arrive time-sorted; when a node appears in several events
+    of the batch the LAST one wins (paper: 'last' message aggregator) —
+    implemented by the later scatter writing over the earlier one.
+
+    nodes: (E,); mem/other_mem: (E, dm) current memories of endpoints;
+    e_feat: (E, de); t: (E,). Returns (E, dm) new memories (pre-scatter).
+    """
+    dt = jnp.maximum(t - last_upd, 0.0)
+    phi = time_encode(dt, mp["te"]["w"], mp["te"]["b"])
+    msg = jnp.concatenate([mem, other_mem, phi, e_feat], axis=-1)
+    return _gru(mp, msg, mem)
+
+
+# ---------------------------------------------------------------------------
+# Link prediction head + losses/metrics
+# ---------------------------------------------------------------------------
+
+
+def init_link_head(cfg: GNNConfig, key: jax.Array) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, (2 * cfg.d_hidden, cfg.d_hidden)),
+            "b1": jnp.zeros((cfg.d_hidden,)),
+            "w2": dense_init(k2, (cfg.d_hidden, 1)),
+            "b2": jnp.zeros((1,))}
+
+
+def link_score(p: PyTree, h_u: jnp.ndarray, h_v: jnp.ndarray
+               ) -> jnp.ndarray:
+    x = jnp.concatenate([h_u, h_v], axis=-1)
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    return (h @ p["w2"] + p["b2"])[..., 0]
+
+
+def bce_logits(scores: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.maximum(scores, 0) - scores * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(scores))))
+
+
+def average_precision(scores, labels) -> float:
+    """Sklearn-style AP (no sklearn in this container)."""
+    import numpy as np
+    scores = np.asarray(scores, np.float64)
+    labels = np.asarray(labels, np.float64)
+    order = np.argsort(-scores, kind="stable")
+    labels = labels[order]
+    tp = np.cumsum(labels)
+    precision = tp / (np.arange(len(labels)) + 1)
+    n_pos = labels.sum()
+    if n_pos == 0:
+        return 0.0
+    return float((precision * labels).sum() / n_pos)

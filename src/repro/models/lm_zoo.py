@@ -1,0 +1,210 @@
+"""ArchConfig -> runnable step functions (train / prefill / serve).
+
+This is the public API the launcher, dry-run, smoke tests and examples use:
+
+    cfg   = get_arch("qwen3-14b")
+    params= init_params(cfg, key)
+    step  = make_train_step(cfg)          # (state, batch) -> (state, metrics)
+    serve = make_serve_step(cfg)          # (params, dstate, tokens) -> ...
+    specs = input_specs(cfg, shape)       # ShapeDtypeStruct stand-ins
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.layers import chunked_softmax_xent, rms_norm
+from repro.models.transformer_lm import (decode_forward, embed_input,
+                                         forward_hidden, init_decode_state,
+                                         init_lm, unembed_weight)
+from repro.train.optimizer import (Optimizer, OPTIMIZERS,
+                                   warmup_cosine_schedule)
+
+PyTree = Any
+COMPUTE_DTYPE = jnp.bfloat16
+
+# fp32-sensitive parameter names kept out of the bf16 compute cast
+_FP32_KEEP = ("A_log", "dt_bias", "D", "router")
+
+
+def _cast_compute(params: PyTree, dtype=COMPUTE_DTYPE) -> PyTree:
+    def one(path, x):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if x.dtype == jnp.float32 and name not in _FP32_KEEP:
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ArchConfig, key: jax.Array,
+                dtype=jnp.float32) -> PyTree:
+    return init_lm(cfg, key, dtype)
+
+
+def param_specs(cfg: ArchConfig, dtype=jnp.float32) -> PyTree:
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_lm(cfg, k, dtype), key)
+
+
+def make_optimizer(cfg: ArchConfig, *, peak_lr: float = 3e-4,
+                   warmup: int = 200, total: int = 10_000) -> Optimizer:
+    sched = warmup_cosine_schedule(peak_lr, warmup, total)
+    return OPTIMIZERS[cfg.optimizer](sched)
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ArchConfig):
+    def loss_fn(params: PyTree, batch: Dict[str, jnp.ndarray]):
+        cp = _cast_compute(params)
+        x = embed_input(cfg, cp, batch)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        h, aux, _ = forward_hidden(cfg, cp, x, positions)
+        h = rms_norm(h, cp["final_norm"], cfg.norm_eps)
+        w_out = unembed_weight(cfg, cp)
+        if cfg.input_kind == "tokens":
+            labels = batch["tokens"][:, 1:]
+            valid = batch.get("valid")
+            valid = valid[:, 1:] if valid is not None else None
+            loss, cnt = chunked_softmax_xent(h[:, :-1], w_out, labels,
+                                             valid)
+        else:  # masked-frame prediction (HuBERT-style)
+            loss, cnt = chunked_softmax_xent(h, w_out, batch["labels"],
+                                             batch["mask"])
+        metrics = {"ce_loss": loss, "tokens": cnt}
+        total = loss
+        if cfg.moe is not None:
+            total = total + cfg.moe.router_aux_weight * aux["moe_lb_loss"]
+            metrics.update({k: v for k, v in aux.items()})
+        metrics["loss"] = total
+        return total, metrics
+    return loss_fn
+
+
+def init_train_state(cfg: ArchConfig, key: jax.Array,
+                     optimizer: Optional[Optimizer] = None) -> Dict:
+    optimizer = optimizer or make_optimizer(cfg)
+    params = init_params(cfg, key)
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def train_state_specs(cfg: ArchConfig,
+                      optimizer: Optional[Optimizer] = None) -> Dict:
+    optimizer = optimizer or make_optimizer(cfg)
+    p = param_specs(cfg)
+    opt = jax.eval_shape(optimizer.init, p)
+    return {"params": p, "opt": opt}
+
+
+def make_train_step(cfg: ArchConfig,
+                    optimizer: Optional[Optimizer] = None):
+    optimizer = optimizer or make_optimizer(cfg)
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state: Dict, batch: Dict[str, jnp.ndarray]):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], batch)
+        new_params, new_opt = optimizer.update(grads, state["opt"],
+                                               state["params"])
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """(params, batch) -> (last-token logits (B, V) f32, decode state)."""
+
+    def prefill(params: PyTree, batch: Dict[str, jnp.ndarray]):
+        cp = _cast_compute(params)
+        x = embed_input(cfg, cp, batch)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        h, _, state = forward_hidden(cfg, cp, x, positions,
+                                     collect_state=True)
+        h = rms_norm(h, cp["final_norm"], cfg.norm_eps)
+        w_out = unembed_weight(cfg, cp)
+        if cfg.is_encoder:
+            # encoder "serving" = full-sequence logits (e.g. frame labels)
+            logits = (h @ w_out).astype(jnp.float32)
+            return logits, None
+        logits = (h[:, -1] @ w_out).astype(jnp.float32)
+        state = dict(state or {})
+        state["pos"] = jnp.full((B,), S, jnp.int32)
+        return logits, state
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig):
+    """(params, dstate, tokens (B,1)) -> (logits (B,V) f32, new dstate)."""
+    if cfg.is_encoder:
+        prefill = make_prefill_step(cfg)
+
+        def encode(params, dstate, batch):
+            logits, _ = prefill(params, batch)
+            return logits, dstate
+        return encode
+
+    def serve(params: PyTree, dstate: Dict, tokens: jnp.ndarray):
+        cp = _cast_compute(params)
+        x = jnp.take(cp["embed"], tokens, axis=0)       # (B, 1, d)
+        h, new_state = decode_forward(cfg, cp, x, dstate)
+        h = rms_norm(h, cp["final_norm"], cfg.norm_eps)
+        w_out = unembed_weight(cfg, cp)
+        logits = (h[:, 0] @ w_out).astype(jnp.float32)
+        return logits, new_state
+
+    return serve
+
+
+def decode_state_specs(cfg: ArchConfig, batch: int, max_seq: int) -> PyTree:
+    return jax.eval_shape(
+        functools.partial(init_decode_state, cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Input stand-ins for lowering (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train  -> {"batch": {...}}
+    prefill-> {"batch": {...}}
+    decode -> {"tokens": (B, 1), "dstate": {...}}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_kind == "tokens":
+            batch = {"tokens": sds((B, S), jnp.int32)}
+        else:
+            batch = {"frames": sds((B, S, cfg.d_model), jnp.bfloat16)}
+            if shape.kind == "train":
+                batch["labels"] = sds((B, S), jnp.int32)
+                batch["mask"] = sds((B, S), jnp.bool_)
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep state
+    return {
+        "tokens": sds((B, 1), jnp.int32),
+        "dstate": decode_state_specs(cfg, B, S),
+    }

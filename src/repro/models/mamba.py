@@ -1,0 +1,396 @@
+"""Mamba-1 and Mamba-2 (SSD) blocks, TPU-shaped.
+
+Hardware adaptation (DESIGN.md §2): the CUDA selective-scan kernel is
+re-derived as a *chunked* scan — an outer ``lax.scan`` carries the SSM state
+across fixed-size time chunks, and inside a chunk the recurrence is computed
+with matmul-shaped ops (associative scan for Mamba-1's per-channel decay;
+the SSD chunk decomposition for Mamba-2's per-head scalar decay). This keeps
+the MXU busy and the live working set to O(B * chunk * d_inner * d_state)
+instead of O(B * L * d_inner * d_state).
+
+Both blocks expose:
+  init(key, cfg, d_model)        -> params
+  forward(params, x, cfg)        -> y                  (train / prefill)
+  init_state(cfg, d_model, B)    -> state pytree       (decode)
+  decode_step(params, x_t, state, cfg) -> (y_t, state) (single token)
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+from repro.dist.sharding import constrain
+from repro.models.layers import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (d_conv taps) as shift-and-add
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """x: (B, L, C); w: (K, C); b: (C,). Causal depthwise conv."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for k in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k]
+        out = out + shifted * w[K - 1 - k]
+    return out + b
+
+
+def conv_step(x_t: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. x_t: (B, C); conv_state: (B, K-1, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba): per-channel decay selective scan
+# ---------------------------------------------------------------------------
+
+
+def mamba1_init(key: jax.Array, ssm: SSMConfig, d_model: int,
+                dtype=jnp.float32) -> dict:
+    d_in = ssm.expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ssm.d_state + 1, dtype=jnp.float32),
+                 (d_in, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[5], (d_in,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001))
+                      + math.log(0.001))
+    # inverse softplus so softplus(dt_bias) == dt_init
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (ssm.d_conv, d_in), dtype,
+                             scale=ssm.d_conv ** -0.5),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * ssm.d_state),
+                             dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), dtype,
+                              scale=dt_rank ** -0.5),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d_model), dtype),
+    }
+
+
+def _mamba1_scan_y(dt: jnp.ndarray, x: jnp.ndarray, A: jnp.ndarray,
+                   Bt: jnp.ndarray, Ct: jnp.ndarray, h0: jnp.ndarray,
+                   chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+    emitting y_t = <h_t, C_t> directly.
+
+    Perf note (§Perf hillclimb C1): the (B, L, Din, N) hidden-state
+    tensor is d_state x larger than every other tensor in the block;
+    materializing it across the whole layer (as the naive formulation
+    does) made falcon-mamba train_4k's memory term 92 s. Building dA/dBx
+    per CHUNK inside the scan and contracting against C_t before leaving
+    the chunk keeps the N-wide tensors transient in (B, chunk, Din, N)
+    working sets.
+
+    dt, x: (B, L, Din); A: (Din, N); Bt, Ct: (B, L, N); h0: (B, Din, N).
+    Returns (y: (B, L, Din) f32, h_last).
+    """
+    B, L, Din = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bt = jnp.pad(Bt, ((0, 0), (0, pad), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, pad), (0, 0)))
+    Lp = dt.shape[1]
+    nC = Lp // chunk
+
+    def r(t):
+        return jnp.moveaxis(t.reshape((B, nC, chunk) + t.shape[2:]), 1, 0)
+
+    dt_c, x_c, B_c, C_c = r(dt), r(x), r(Bt), r(Ct)
+
+    def chunk_step(h, xs):
+        dt_b, x_b, B_b, C_b = xs               # (B, c, ...)
+        # §Perf C3: sequential time scan INSIDE the chunk — the per-step
+        # working set is one (B, Din, N) state, so the N-wide tensors
+        # never hit HBM at (B, c, Din, N) size. (The associative-scan
+        # variant cost log2(c) full-chunk passes plus backward saves;
+        # measured 67.6s -> see EXPERIMENTS.md §Perf.)
+        dt_t = jnp.moveaxis(dt_b, 1, 0)        # (c, B, Din)
+        x_t = jnp.moveaxis(x_b, 1, 0)
+        B_t = jnp.moveaxis(B_b, 1, 0)          # (c, B, N)
+        C_t = jnp.moveaxis(C_b, 1, 0)
+
+        def t_step(hc, ys):
+            dtt, xt, Bt_, Ct_ = ys
+            dA = jnp.exp(dtt[..., None] * A)   # (B, Din, N)
+            hc = dA * hc + (dtt * xt)[..., None] * Bt_[:, None, :]
+            # §Perf C4: pin the carry's channel sharding — GSPMD loses it
+            # at the backward-scan boundary and replicates (B, L, Din, N)
+            hc = constrain(hc, "batch", "tp", None)
+            y = jnp.einsum("bhn,bn->bh", hc, Ct_)
+            return hc, y
+
+        h, y = lax.scan(t_step, h, (dt_t, x_t, B_t, C_t))
+        return h, jnp.moveaxis(y, 0, 1)        # (B, c, Din)
+
+    h_last, y_chunks = lax.scan(chunk_step, h0, (dt_c, x_c, B_c, C_c))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B, Lp, Din)
+    return y[:, :L], h_last
+
+
+def mamba1_core(params: dict, x: jnp.ndarray, ssm: SSMConfig,
+                h0: jnp.ndarray | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, L, d_in) post-conv. Returns (y, h_last)."""
+    B, L, Din = x.shape
+    N = ssm.d_state
+    dt_rank = params["dt_proj"].shape[0]
+    xdbc = x @ params["x_proj"]                 # (B, L, dt_rank + 2N)
+    dt = jax.nn.softplus(
+        (xdbc[..., :dt_rank] @ params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                    # (B, L, Din)
+    Bt = xdbc[..., dt_rank:dt_rank + N].astype(jnp.float32)
+    Ct = xdbc[..., dt_rank + N:].astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])               # (Din, N)
+    if h0 is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+    h0 = constrain(h0, "batch", "tp", None)
+    dt = constrain(dt, "batch", "seq_act", "tp")
+    y, h_last = _mamba1_scan_y(dt, x.astype(jnp.float32), A, Bt, Ct, h0,
+                               ssm.chunk)
+    y = constrain(y, "batch", "seq_act", "tp")
+    y = y + params["D"] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_last
+
+
+def mamba1_forward(params: dict, x: jnp.ndarray, ssm: SSMConfig,
+                   return_state: bool = False):
+    """Full block: x (B, L, d_model) -> (B, L, d_model) [, decode state]."""
+    d_in = params["conv_w"].shape[1]
+    K = params["conv_w"].shape[0]
+    xz = x @ params["in_proj"]
+    xi_pre, z = xz[..., :d_in], xz[..., d_in:]
+    xi = causal_conv1d(xi_pre, params["conv_w"], params["conv_b"])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+    # channel-separable from here on: TP over d_inner is collective-free
+    xi = constrain(xi, "batch", "seq_act", "tp")
+    y, h_last = mamba1_core(params, xi, ssm)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ params["out_proj"]
+    if return_state:
+        conv_state = xi_pre[:, -(K - 1):] if K > 1 else \
+            xi_pre[:, :0]
+        return out, {"conv": conv_state, "h": h_last}
+    return out
+
+
+def mamba1_init_state(ssm: SSMConfig, d_model: int, batch: int,
+                      dtype=jnp.float32) -> dict:
+    d_in = ssm.expand * d_model
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, d_in), dtype),
+        "h": jnp.zeros((batch, d_in, ssm.d_state), jnp.float32),
+    }
+
+
+def mamba1_decode_step(params: dict, x_t: jnp.ndarray, state: dict,
+                       ssm: SSMConfig) -> Tuple[jnp.ndarray, dict]:
+    """x_t: (B, d_model) -> (y_t: (B, d_model), state)."""
+    d_in = params["conv_w"].shape[1]
+    N = ssm.d_state
+    dt_rank = params["dt_proj"].shape[0]
+    xz = x_t @ params["in_proj"]
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    xi, conv_state = conv_step(xi, state["conv"], params["conv_w"],
+                               params["conv_b"])
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x_t.dtype)
+    xdbc = xi @ params["x_proj"]
+    dt = jax.nn.softplus(
+        (xdbc[..., :dt_rank] @ params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                    # (B, Din)
+    Bt = xdbc[..., dt_rank:dt_rank + N].astype(jnp.float32)
+    Ct = xdbc[..., dt_rank + N:].astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)             # (B, Din, N)
+    h = dA * state["h"] + (dt * xi.astype(jnp.float32))[..., None] \
+        * Bt[:, None, :]
+    y = jnp.einsum("bhn,bn->bh", h, Ct) + params["D"] * xi.astype(
+        jnp.float32)
+    y = y.astype(x_t.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(
+        x_t.dtype)
+    return y @ params["out_proj"], {"conv": conv_state, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2): per-head scalar decay, chunked matmul form
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key: jax.Array, ssm: SSMConfig, d_model: int,
+                dtype=jnp.float32) -> dict:
+    d_in = ssm.expand * d_model
+    nheads = d_in // ssm.headdim
+    conv_dim = d_in + 2 * ssm.d_state
+    ks = jax.random.split(key, 4)
+    A = jnp.arange(1, nheads + 1, dtype=jnp.float32)
+    dt_init = jnp.exp(jax.random.uniform(ks[3], (nheads,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001))
+                      + math.log(0.001))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": dense_init(
+            ks[0], (d_model, 2 * d_in + 2 * ssm.d_state + nheads), dtype),
+        "conv_w": dense_init(ks[1], (ssm.d_conv, conv_dim), dtype,
+                             scale=ssm.d_conv ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d_model), dtype),
+    }
+
+
+def _ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 Bt: jnp.ndarray, Ct: jnp.ndarray, chunk: int,
+                 h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD chunk decomposition (Mamba-2 paper §6).
+
+    x: (B, L, H, P); dt: (B, L, H); A: (H,) negative; Bt, Ct: (B, L, N);
+    h0: (B, H, N, P). Returns (y: (B, L, H, P), h_last).
+    """
+    B, L, H, P = x.shape
+    N = Bt.shape[-1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bt = jnp.pad(Bt, ((0, 0), (0, pad), (0, 0)))
+        Ct = jnp.pad(Ct, ((0, 0), (0, pad), (0, 0)))
+    Lp = x.shape[1]
+    nC = Lp // chunk
+
+    def r(t, extra=()):  # (B, Lp, ...) -> (nC, B, chunk, ...)
+        return jnp.moveaxis(t.reshape((B, nC, chunk) + t.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = r(x), r(dt), r(Bt), r(Ct)
+    dA = dtc * A                                  # (nC, B, c, H) log-decay<=0
+
+    def chunk_step(h, xs):
+        x_b, dt_b, B_b, C_b, dA_b = xs            # (B, c, ...)
+        cum = jnp.cumsum(dA_b, axis=1)            # (B, c, H)
+        # intra-chunk: scores[t,s] = C_t.B_s * exp(cum_t - cum_s) * dt_s
+        Lmat = cum[:, :, None, :] - cum[:, None, :, :]     # (B, c, c, H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(Lmat), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", C_b, B_b,
+                        preferred_element_type=jnp.float32)  # (B, c, c)
+        scores = cb[..., None] * Lmat * dt_b[:, None, :, :]  # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores,
+                             x_b.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("btn,bthnp->bthp", C_b,
+                             jnp.exp(cum)[..., None, None]
+                             * h[:, None])        # h: (B, H, N, P)
+        # next state: h' = exp(cum_last)*h + sum_s exp(cum_last-cum_s)
+        #             * dt_s * B_s (x) x_s
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)          # (B, c, H)
+        state_upd = jnp.einsum("bsh,bsn,bshp->bhnp",
+                               decay_to_end * dt_b, B_b,
+                               x_b.astype(jnp.float32))
+        h_new = jnp.exp(cum[:, -1])[..., None, None] * h + state_upd
+        return h_new, (y_intra + y_inter)
+
+    h_last, y_chunks = lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc, dA))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B, Lp, H, P)
+    return y[:, :L], h_last
+
+
+def mamba2_forward(params: dict, x: jnp.ndarray, ssm: SSMConfig,
+                   return_state: bool = False):
+    """Full Mamba-2 block. x: (B, L, d_model)."""
+    B, L, _ = x.shape
+    d_in = params["norm_w"].shape[0]
+    nheads = params["A_log"].shape[0]
+    P = ssm.headdim
+    N = ssm.d_state
+    K = params["conv_w"].shape[0]
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc_pre = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt_raw = zxbcdt[..., -nheads:]
+    xbc = causal_conv1d(xbc_pre, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xi = xbc[..., :d_in].reshape(B, L, nheads, P)
+    # head-separable SSD: TP over heads is collective-free
+    xi = constrain(xi, "batch", "seq_act", "tp", None)
+    Bt = xbc[..., d_in:d_in + N].astype(jnp.float32)
+    Ct = xbc[..., d_in + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    dt = constrain(dt, "batch", "seq_act", "tp")
+    A = -jnp.exp(params["A_log"])
+    h0 = jnp.zeros((B, nheads, N, P), jnp.float32)
+    y, h_last = _ssd_chunked(xi, dt, A, Bt, Ct, ssm.chunk, h0)
+    y = y + params["D"][:, None] * xi.astype(jnp.float32)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm_w"])
+    out = y @ params["out_proj"]
+    if return_state:
+        conv_state = xbc_pre[:, -(K - 1):] if K > 1 else xbc_pre[:, :0]
+        return out, {"conv": conv_state, "h": h_last}
+    return out
+
+
+def mamba2_init_state(ssm: SSMConfig, d_model: int, batch: int,
+                      dtype=jnp.float32) -> dict:
+    d_in = ssm.expand * d_model
+    nheads = d_in // ssm.headdim
+    conv_dim = d_in + 2 * ssm.d_state
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, nheads, ssm.d_state, ssm.headdim),
+                       jnp.float32),
+    }
+
+
+def mamba2_decode_step(params: dict, x_t: jnp.ndarray, state: dict,
+                       ssm: SSMConfig) -> Tuple[jnp.ndarray, dict]:
+    """x_t: (B, d_model)."""
+    B = x_t.shape[0]
+    d_in = params["norm_w"].shape[0]
+    nheads = params["A_log"].shape[0]
+    P, N = ssm.headdim, ssm.d_state
+    zxbcdt = x_t @ params["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt_raw = zxbcdt[..., -nheads:]
+    xbc, conv_state = conv_step(xbc, state["conv"], params["conv_w"],
+                                params["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x_t.dtype)
+    xi = xbc[..., :d_in].reshape(B, nheads, P).astype(jnp.float32)
+    Bt = xbc[..., d_in:d_in + N].astype(jnp.float32)
+    Ct = xbc[..., d_in + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                       # (B, H)
+    h = (decay[..., None, None] * state["h"]
+         + jnp.einsum("bh,bn,bhp->bhnp", dt, Bt, xi))
+    y = jnp.einsum("bn,bhnp->bhp", Ct, h) + params["D"][:, None] * xi
+    y = y.reshape(B, d_in).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype),
+                 params["norm_w"])
+    return y @ params["out_proj"], {"conv": conv_state, "h": h}

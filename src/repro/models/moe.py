@@ -1,0 +1,295 @@
+"""Mixture-of-Experts layer with sort/scatter token dispatch.
+
+Design notes (TPU):
+  * Dispatch is computed *per batch row* so that top-k, argsort and the
+    position-in-expert ranking are all local under batch (DP) sharding —
+    no global sort collectives under GSPMD.
+  * Capacity-based: each row contributes at most C = ceil(k*S*cf/E) token
+    slots per expert; overflow tokens are dropped (their residual passes
+    through), matching GShard/Switch semantics.
+  * We deliberately avoid the classic one-hot dispatch einsum: at E=128,
+    C=320 its (tokens x E x C x d) contraction costs ~3x the expert matmul
+    FLOPs. The scatter formulation keeps dispatch cost negligible; expert
+    FLOPs = useful FLOPs * capacity_factor.
+  * Expert buffers are sharded over 'expert' (=mesh 'model') between the
+    scatter and the expert matmul via logical constraints; GSPMD inserts
+    the all-to-all-style resharding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.dist.sharding import (active_mesh, axis_for, axis_size_of,
+                                 constrain)
+from repro.models.layers import dense_init, mlp_apply
+
+
+def moe_capacity(moe: MoEConfig, seq_len: int) -> int:
+    c = math.ceil(moe.top_k * seq_len * moe.capacity_factor
+                  / moe.num_experts)
+    return max(4, int(c))
+
+
+def moe_init(key: jax.Array, moe: MoEConfig, d_model: int, act: str,
+             dtype=jnp.float32) -> dict:
+    E, f = moe.num_experts, moe.expert_d_ff
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d_model, E), jnp.float32,
+                             scale=d_model ** -0.5),
+        "w_up": dense_init(ks[1], (E, d_model, f), dtype),
+        "w_down": dense_init(ks[2], (E, f, d_model), dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks[3], (E, d_model, f), dtype)
+    if moe.shared_expert_d_ff:
+        sf = moe.shared_expert_d_ff
+        shared = {
+            "w_up": dense_init(ks[4], (d_model, sf), dtype),
+            "w_down": dense_init(ks[5], (sf, d_model), dtype),
+        }
+        if act == "swiglu":
+            shared["w_gate"] = dense_init(
+                jax.random.fold_in(key, 7), (d_model, sf), dtype)
+        p["shared"] = shared
+    return p
+
+
+def _expert_ffn(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """x: (B, E, C, d) with per-expert weights (E, d, f)."""
+    if act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", x, p["w_gate"])
+        u = jnp.einsum("becd,edf->becf", x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = jnp.einsum("becd,edf->becf", x, p["w_up"])
+        if act == "sq_relu":
+            h = jnp.square(jax.nn.relu(u))
+        else:
+            h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+
+def moe_apply(params: dict, x: jnp.ndarray, moe: MoEConfig, act: str
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) -> (out (B, S, d), aux metrics incl. load-balance loss).
+
+    Path selection: under an active mesh with the 'expert' axis mapped and
+    a sharded sequence (training layout), use the shard_map expert-parallel
+    path — local top-k/sort/scatter + ONE all-to-all each way (§Perf
+    hillclimb B1; the GSPMD dense path emitted 8.6 GB all-reduces of the
+    dispatch buffers per layer on qwen3-moe: 153 s collective term).
+    """
+    mesh = active_mesh()
+    ep_ax = axis_for("expert")
+    sp = axis_size_of("seq_act")
+    if (mesh is not None and ep_ax is not None and sp > 1
+            and x.shape[1] % sp == 0
+            and moe.num_experts % axis_size_of("expert") == 0):
+        return _moe_apply_ep(params, x, moe, act)
+    return _moe_apply_dense(params, x, moe, act)
+
+
+def _moe_apply_dense(params: dict, x: jnp.ndarray, moe: MoEConfig,
+                     act: str) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, S, d = x.shape
+    E, k = moe.num_experts, moe.top_k
+    C = moe_capacity(moe, S)
+
+    # per-row dispatch needs the full row locally: undo any sequence
+    # sharding here (re-applied by the block's exit constraint)
+    x = constrain(x, "batch", None, None)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B, S, E)
+    gate, expert_idx = jax.lax.top_k(probs, k)               # (B, S, k)
+    gate = gate / jnp.clip(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # ---- per-row dispatch bookkeeping (all local under batch sharding) ----
+    Tk = S * k
+    e_flat = expert_idx.reshape(B, Tk)
+    g_flat = gate.reshape(B, Tk)
+    tok_of_slot = jnp.repeat(jnp.arange(S), k)               # (Tk,)
+
+    order = jnp.argsort(e_flat, axis=-1, stable=True)        # (B, Tk)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+    g_sorted = jnp.take_along_axis(g_flat, order, axis=-1)
+    tok_sorted = tok_of_slot[order]                          # (B, Tk)
+
+    # position of each sorted slot within its expert segment
+    seg_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E), side="left")
+    )(e_sorted)                                              # (B, E)
+    pos = (jnp.arange(Tk)[None, :]
+           - jnp.take_along_axis(seg_start, e_sorted, axis=-1))
+    keep = pos < C
+    slot = jnp.where(keep, e_sorted * C + pos, E * C)        # drop -> dummy
+
+    # ---- scatter tokens into expert buffers (B, E*C+1, d) ----
+    x_sorted = jnp.take_along_axis(
+        x, tok_sorted[..., None], axis=1)                    # (B, Tk, d)
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, x_sorted)
+    buf = buf[:, :E * C].reshape(B, E, C, d)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    # ---- expert compute (E sharded over 'model') ----
+    out_buf = _expert_ffn(params, buf, act)                  # (B, E, C, d)
+    out_buf = constrain(out_buf, "batch", "expert", None, None)
+    out_buf = out_buf.reshape(B, E * C, d)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((B, 1, d), x.dtype)], axis=1)    # dummy row
+    out_buf = constrain(out_buf, "batch", None, None)
+
+    # ---- gather back to token order, weighted combine ----
+    y_sorted = jnp.take_along_axis(
+        out_buf, slot[..., None], axis=1)                    # (B, Tk, d)
+    w = (g_sorted * keep).astype(x.dtype)[..., None]
+    y = jnp.zeros((B, S, d), x.dtype)
+    y = jax.vmap(lambda acc, t, v: acc.at[t].add(v))(
+        y, tok_sorted, y_sorted * w)
+
+    # ---- shared expert (always-on) ----
+    if "shared" in params:
+        y = y + mlp_apply(x, params["shared"], act)
+
+    # ---- aux: load-balance loss (Switch) + stats ----
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(e_flat, E, dtype=jnp.float32), axis=(0, 1))  # (E,)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * mean_prob)
+    dropped = jnp.mean(1.0 - keep.astype(jnp.float32))
+    aux = {"moe_lb_loss": lb_loss, "moe_drop_frac": dropped}
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel path (shard_map + all-to-all)
+# ---------------------------------------------------------------------------
+
+
+def _moe_local_shard(params, x, moe: MoEConfig, act: str, ep_names,
+                     all_names):
+    """Body executed per device under shard_map.
+
+    x: (B_loc, S_loc, d) local tokens; expert weights local (E_loc, ...).
+    Dispatch is fully local (top-k, sort, scatter), then ONE tiled
+    all-to-all moves each expert's slots to its owner and one moves the
+    results back — the canonical EP schedule.
+    """
+    from jax import lax
+
+    Bl, Sl, d = x.shape
+    E, k = moe.num_experts, moe.top_k
+    ep = 1
+    for nm in ep_names:
+        ep *= lax.axis_size(nm)
+    E_loc = E // ep
+    T = Bl * Sl
+    C = max(4, int(np.ceil(k * T * moe.capacity_factor / E)))
+
+    xt = x.reshape(T, d)
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gate = gate / jnp.clip(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    e_flat = expert_idx.reshape(T * k)
+    g_flat = gate.reshape(T * k)
+    tok_of_slot = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    g_sorted = g_flat[order]
+    tok_sorted = tok_of_slot[order]
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    pos = jnp.arange(T * k) - seg_start[e_sorted]
+    keep = pos < C
+    slot = jnp.where(keep, e_sorted * C + pos, E * C)
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[slot].set(xt[tok_sorted], mode="drop")
+    buf = buf[:E * C].reshape(E, C, d)
+
+    # ---- all-to-all: send each expert's slots to its owner ----
+    # (E, C, d) -> (E_loc, ep*C, d): owner receives all source shards
+    recv = buf
+    for nm in ep_names:  # single name in practice
+        recv = lax.all_to_all(recv, nm, split_axis=0, concat_axis=1,
+                              tiled=True)
+
+    # ---- local expert FFN on (E_loc, ep*C, d) ----
+    if act == "swiglu":
+        g_ = jnp.einsum("ecd,edf->ecf", recv, params["w_gate"])
+        u_ = jnp.einsum("ecd,edf->ecf", recv, params["w_up"])
+        h = jax.nn.silu(g_.astype(jnp.float32)).astype(x.dtype) * u_
+    else:
+        u_ = jnp.einsum("ecd,edf->ecf", recv, params["w_up"])
+        h = (jnp.square(jax.nn.relu(u_)) if act == "sq_relu"
+             else jax.nn.gelu(u_.astype(jnp.float32)).astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    # ---- return path ----
+    for nm in ep_names:
+        out = lax.all_to_all(out, nm, split_axis=1, concat_axis=0,
+                             tiled=True)
+    out = out.reshape(E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), x.dtype)], axis=0)
+
+    y_sorted = out[slot]
+    w = (g_sorted * keep).astype(x.dtype)[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[tok_sorted].add(y_sorted * w)
+    y = y.reshape(Bl, Sl, d)
+
+    if "shared" in params:
+        y = y + mlp_apply(x, params["shared"], act)
+
+    frac_tokens = jnp.mean(jax.nn.one_hot(e_flat, E, dtype=jnp.float32),
+                           axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    lb = E * jnp.sum(frac_tokens * mean_prob)
+    dropped = jnp.mean(1.0 - keep.astype(jnp.float32))
+    lb = lax.pmean(lb, all_names)
+    dropped = lax.pmean(dropped, all_names)
+    return y, lb, dropped
+
+
+def _moe_apply_ep(params: dict, x: jnp.ndarray, moe: MoEConfig, act: str
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    from jax.sharding import PartitionSpec as P
+
+    mesh = active_mesh()
+    dp_ax = axis_for("batch")
+    sp_ax = axis_for("seq_act")
+    ep_ax = axis_for("expert")
+    ep_names = (ep_ax,) if isinstance(ep_ax, str) else tuple(ep_ax)
+    all_names = tuple(mesh.axis_names)
+
+    x_spec = P(dp_ax, sp_ax, None)
+
+    def pspec(path_leaf_name, leaf):
+        nd = leaf.ndim
+        if path_leaf_name in ("w_gate", "w_up", "w_down") and nd == 3:
+            return P(ep_ax, None, None)
+        return P(*([None] * nd))
+
+    pspecs = {}
+    for name, leaf in params.items():
+        if name == "shared":
+            pspecs[name] = {n: P(*([None] * l.ndim))
+                            for n, l in leaf.items()}
+        else:
+            pspecs[name] = pspec(name, leaf)
+
+    fn = jax.shard_map(
+        lambda p, xx: _moe_local_shard(p, xx, moe, act, ep_names,
+                                       all_names),
+        mesh=mesh, in_specs=(pspecs, x_spec),
+        out_specs=(x_spec, P(), P()), check_vma=False)
+    y, lb, dropped = fn(params, x)
+    return y, {"moe_lb_loss": lb, "moe_drop_frac": dropped}

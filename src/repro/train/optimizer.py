@@ -1,0 +1,234 @@
+"""Minimal, dependency-free optimizer library (optax is not installed).
+
+Optimizers are (init_fn, update_fn) pairs operating on pytrees, in the optax
+style, so they compose with jit/pjit and shard trivially (optimizer state
+mirrors parameter sharding).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int, final_frac: float = 0.1
+                           ) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def linear_warmup_schedule(peak_lr: float, warmup_steps: int) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        return peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Gradient transforms
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float
+                        ) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], Any]
+    update: Callable[[PyTree, Any, PyTree], Tuple[PyTree, Any]]
+    """update(grads, state, params) -> (new_params, new_state)"""
+
+
+def adamw(lr: float | Schedule, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          max_grad_norm: Optional[float] = 1.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = sched(step)
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / c1
+            vhat = v / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr_t * (step_ + weight_decay * p32)
+            return p32.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        # unzip the 3-tuples
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: PyTree
+
+
+def sgd(lr: float | Schedule, *, momentum: float = 0.9,
+        nesterov: bool = False, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return SGDState(step=jnp.zeros((), jnp.int32),
+                        momentum=jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g
+            d = g + momentum * m if nesterov else m
+            p32 = p.astype(jnp.float32) - lr_t * d
+            return p32.astype(p.dtype), m
+
+        out = jax.tree.map(upd, params, grads, state.momentum)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, SGDState(step=step, momentum=new_m)
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor_lite(lr: float | Schedule, *, decay: float = 0.8,
+                   eps: float = 1e-30, weight_decay: float = 0.0
+                   ) -> Optimizer:
+    """Factored second-moment optimizer (memory-lean, for 340B-class runs).
+
+    Rank>=2 tensors store row/col second-moment factors only; rank<2 fall
+    back to full second moments. No first moment (beta1=0), per Adafactor.
+    """
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return (row, col)
+            return jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(one, params,
+                                          is_leaf=None),
+                          nu=None)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = sched(step)
+        beta = 1.0 - jnp.power(t, -decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                row, col = s
+                row = beta * row + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * col + (1 - beta) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(row, axis=-1, keepdims=True)
+                v = (row[..., :, None] * col[..., None, :]
+                     / (rmean[..., None] + eps))
+                s = (row, col)
+            else:
+                s = beta * s + (1 - beta) * g2
+                v = s
+            upd_ = g / (jnp.sqrt(v) + 1e-8)
+            # update clipping (RMS<=1), per Adafactor
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-12)
+            upd_ = upd_ / jnp.maximum(1.0, rms)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr_t * (upd_ + weight_decay * p32)
+            return p32.astype(p.dtype), s
+
+        is_state_leaf = lambda x: isinstance(x, tuple) and not isinstance(
+            x[0], tuple)
+        out = jax.tree.map(upd, params, grads, state.mu,
+                           is_leaf=lambda x: False)
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step=step, mu=new_s, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+OPTIMIZERS = {"adamw": adamw, "sgd": sgd, "adafactor": adafactor_lite}

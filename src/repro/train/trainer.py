@@ -1,0 +1,93 @@
+"""Generic LM train loop: jit step + checkpointing + elastic resume +
+optional gradient compression (the GNN wing has its own driver in
+core/continuous.py; this one serves the assigned-architecture configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm_zoo
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import StragglerPolicy
+from repro.train.optimizer import Optimizer
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 100
+    keep: int = 3
+    log_every: int = 10
+    grad_accum: int = 1
+    max_steps: int = 1000
+
+
+class LMTrainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig,
+                 optimizer: Optional[Optimizer] = None, seed: int = 0):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.optimizer = optimizer or lm_zoo.make_optimizer(cfg)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.straggler = StragglerPolicy()
+
+        self.step = 0
+        self.cursor = 0          # data-stream position for exact resume
+        self.state = None
+        self._seed = seed
+        self._jit_step = None
+
+    # -- lifecycle -------------------------------------------------------
+    def init_or_restore(self) -> None:
+        template = lm_zoo.train_state_specs(self.cfg, self.optimizer)
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            zeros = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), template)
+            self.step, self.state, extra = self.ckpt.restore(zeros)
+            self.cursor = int(extra.get("cursor", 0))
+        else:
+            self.state = lm_zoo.init_train_state(
+                self.cfg, jax.random.PRNGKey(self._seed), self.optimizer)
+        self._jit_step = jax.jit(
+            lm_zoo.make_train_step(self.cfg, self.optimizer),
+            donate_argnums=(0,))
+
+    # -- loop --------------------------------------------------------------
+    def train(self, batches: Iterator[Dict[str, jnp.ndarray]],
+              max_steps: Optional[int] = None) -> Dict[str, float]:
+        assert self.state is not None, "call init_or_restore() first"
+        max_steps = max_steps or self.tcfg.max_steps
+        metrics: Dict[str, float] = {}
+        t_log = time.perf_counter()
+        for batch in batches:
+            if self.step >= max_steps:
+                break
+            t0 = time.perf_counter()
+            self.state, m = self._jit_step(self.state, batch)
+            dt = time.perf_counter() - t0
+            self.straggler.observe(0, dt)
+            self.step += 1
+            self.cursor += 1
+            if self.step % self.tcfg.log_every == 0:
+                metrics = {k: float(v) for k, v in m.items()}
+                metrics["steps_per_s"] = self.tcfg.log_every / (
+                    time.perf_counter() - t_log)
+                t_log = time.perf_counter()
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(self.step, self.state,
+                               extra={"cursor": self.cursor})
+        self.ckpt.save(self.step, self.state,
+                       extra={"cursor": self.cursor})
+        self.ckpt.wait()
+        return metrics

@@ -1,0 +1,179 @@
+"""Dynamic graph storage: unit + property tests (paper §4.1 invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dgraph import NULL, DynamicGraph
+from repro.core.snapshot import build_snapshot, refresh_snapshot
+
+
+def _rand_stream(n_events, n_nodes, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_events)
+    dst = rng.integers(0, n_nodes, n_events)
+    ts = np.sort(rng.uniform(0, 1000.0, n_events))
+    return src, dst, ts
+
+
+def test_insert_and_query_window():
+    g = DynamicGraph(threshold=8)
+    g.add_edges(np.array([0, 0, 0]), np.array([1, 2, 3]),
+                np.array([1.0, 2.0, 3.0]))
+    nbrs, eids, tss = g.neighbors_in_window(0, 0.0, 2.5)
+    assert list(nbrs) == [2, 1]          # newest first
+    assert list(tss) == [2.0, 1.0]
+    nbrs, _, _ = g.neighbors_in_window(0, 2.0, 10.0)
+    assert list(nbrs) == [3, 2]
+
+
+def test_adaptive_block_sizing_bounds():
+    """b_v = min(max(deg, min_block), tau)."""
+    g = DynamicGraph(threshold=16, min_block=4)
+    # low-degree node -> small exact-fit-ish blocks
+    g.add_edges(np.array([1, 1]), np.array([2, 3]), np.array([1.0, 2.0]))
+    assert g.blk_cap[g.head[1]] <= 16
+    # hub: many inserts -> blocks capped at tau
+    for t in range(20):
+        g.add_edges(np.full(32, 5), np.arange(32),
+                    np.full(32, 10.0 + t))
+    caps = [g.blk_cap[b] for b in g.node_blocks_newest_first(5)]
+    assert max(caps) <= 16
+    assert g.degree[5] == 20 * 32
+
+
+def test_chronological_enforcement():
+    g = DynamicGraph()
+    g.add_edges(np.array([0]), np.array([1]), np.array([5.0]))
+    with pytest.raises(ValueError):
+        g.add_edges(np.array([0]), np.array([1]), np.array([1.0]))
+
+
+def test_deletion_validity():
+    g = DynamicGraph()
+    eids = g.add_edges(np.array([0, 0]), np.array([1, 2]),
+                       np.array([1.0, 2.0]))
+    n = g.delete_edges([int(eids[0])])
+    assert n == 1
+    nbrs, _, _ = g.neighbors_in_window(0, 0.0, 10.0)
+    assert list(nbrs) == [2]
+
+
+def test_undirected_stores_both_endpoints():
+    g = DynamicGraph(undirected=True)
+    g.add_edges(np.array([0]), np.array([1]), np.array([1.0]))
+    assert list(g.neighbors_in_window(0, 0, 9)[0]) == [1]
+    assert list(g.neighbors_in_window(1, 0, 9)[0]) == [0]
+
+
+def test_offload(tmp_path):
+    g = DynamicGraph(threshold=4)
+    g.add_edges(np.array([0] * 8), np.arange(8),
+                np.arange(8, dtype=float))
+    n = g.offload_older_than(4.0, tmp_path / "old.npz")
+    assert n >= 1
+    nbrs, _, tss = g.neighbors_in_window(0, 0.0, 100.0)
+    assert (tss >= 4.0).all() or len(tss) == 0
+
+
+def test_save_load_roundtrip(tmp_path):
+    src, dst, ts = _rand_stream(500, 40, seed=3)
+    g = DynamicGraph(threshold=16, undirected=True)
+    g.add_edges(src, dst, ts)
+    g.save(tmp_path / "g.npz")
+    g2 = DynamicGraph.load(tmp_path / "g.npz")
+    for v in range(40):
+        a = g.neighbors_in_window(v, 100.0, 700.0)
+        b = g2.neighbors_in_window(v, 100.0, 700.0)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[2], b[2])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 64),
+       st.sampled_from([1, 2, 4, 16, 256]))
+def test_property_matches_bruteforce(seed, n_nodes, tau):
+    """Block store query == brute-force edge-list filter, any tau."""
+    rng = np.random.default_rng(seed)
+    n_ev = int(rng.integers(1, 300))
+    src = rng.integers(0, n_nodes, n_ev)
+    dst = rng.integers(0, n_nodes, n_ev)
+    ts = np.sort(rng.uniform(0, 100.0, n_ev))
+    g = DynamicGraph(threshold=tau, min_block=1)
+    # ingest in several batches (exercises append/allocation paths)
+    cuts = sorted(rng.integers(0, n_ev, 3))
+    prev = 0
+    for c in list(cuts) + [n_ev]:
+        if c > prev:
+            g.add_edges(src[prev:c], dst[prev:c], ts[prev:c])
+        prev = c
+    t0, t1 = sorted(rng.uniform(0, 100.0, 2))
+    v = int(rng.integers(0, n_nodes))
+    nbrs, eids, tss = g.neighbors_in_window(v, t0, t1)
+    # brute force
+    sel = (src == v) & (ts >= t0) & (ts < t1)
+    exp_ts = ts[sel][::-1]
+    np.testing.assert_allclose(np.sort(tss), np.sort(exp_ts))
+    assert (np.diff(tss) <= 1e-12).all() or len(tss) < 2  # newest first
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_invariants(seed):
+    """Structural invariants: chronological blocks, arena extents disjoint,
+    degree bookkeeping."""
+    rng = np.random.default_rng(seed)
+    src, dst, ts = _rand_stream(int(rng.integers(10, 400)), 30, seed)
+    g = DynamicGraph(threshold=int(rng.integers(2, 32)))
+    g.add_edges(src, dst, ts)
+    for v in range(g.n_nodes):
+        blocks = list(g.node_blocks_newest_first(v))
+        # chronological: each older block's tmax <= newer block's tmin
+        for newer, older in zip(blocks, blocks[1:]):
+            if g.blk_size[newer] and g.blk_size[older]:
+                assert g.blk_tmax[older] <= g.blk_tmin[newer] + 1e-9
+        # within-block sorted
+        for b in blocks:
+            s, z = int(g.blk_start[b]), int(g.blk_size[b])
+            assert (np.diff(g.ts[s:s + z]) >= 0).all()
+        assert g.degree[v] == sum(int(g.blk_size[b]) for b in blocks)
+    # arena extents disjoint
+    spans = sorted((int(g.blk_start[b]),
+                    int(g.blk_start[b] + g.blk_cap[b]))
+                   for b in range(g.n_blocks))
+    for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+        assert e1 <= s2
+
+
+def test_snapshot_matches_graph():
+    src, dst, ts = _rand_stream(800, 50, seed=7)
+    g = DynamicGraph(threshold=16)
+    g.add_edges(src, dst, ts)
+    snap = build_snapshot(g)
+    assert snap.num_nodes == g.n_nodes
+    # page table: newest first, counts match
+    for v in range(g.n_nodes):
+        expected = list(g.node_blocks_newest_first(v))
+        got = [p for p in snap.page_table[v] if p != NULL]
+        assert got == expected
+    # metadata much smaller than edge data (paper Table 6 property)
+    assert snap.metadata_bytes() < snap.edge_data_bytes()
+
+
+def test_snapshot_incremental_refresh():
+    src, dst, ts = _rand_stream(400, 30, seed=9)
+    g = DynamicGraph(threshold=16)
+    g.add_edges(src[:200], dst[:200], ts[:200])
+    snap = build_snapshot(g)
+    g.add_edges(src[200:], dst[200:], ts[200:])
+    snap = refresh_snapshot(g, snap)
+    fresh = build_snapshot(g, page_cap=snap.page_cap)
+    if fresh.num_pages == snap.num_pages:  # in-place path taken
+        np.testing.assert_array_equal(snap.nbr, fresh.nbr)
+        np.testing.assert_array_equal(snap.valid, fresh.valid)
+    else:  # rebuilt
+        snap = fresh
+    # deletions propagate through refresh
+    all_eids = g.eid[:g.arena_used][g.valid[:g.arena_used]]
+    g.delete_edges(all_eids[:5].tolist())
+    snap = refresh_snapshot(g, snap)
+    assert snap.valid.sum() < fresh.valid.sum() + 1

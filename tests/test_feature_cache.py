@@ -1,0 +1,178 @@
+"""Vectorized dynamic cache: semantics vs reference dicts + reuse/restore."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.feature_cache import NULL, FeatureCache
+
+
+def _feat(ids, dim=8):
+    ids = np.asarray(ids, np.int64)
+    return (ids[:, None] * 10.0 + np.arange(dim)[None, :]).astype(
+        np.float32)
+
+
+def _drive(cache, batches, dim=8):
+    """Feed id batches through lookup+update; return per-batch hit masks."""
+    hits = []
+    for ids in batches:
+        ids = np.asarray(ids, np.int32)
+        out = cache.fetch(ids, lambda missing: _feat(missing, dim))
+        # features must always be correct, hit or miss
+        np.testing.assert_allclose(np.asarray(out), _feat(ids, dim))
+        hits.append(cache.hit_rate)
+    return hits
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu", "fifo"])
+def test_basic_contract(policy):
+    c = FeatureCache(capacity=8, dim=8, id_space=100, policy=policy,
+                     lam=1.0)
+    _drive(c, [[1, 2, 3], [1, 2, 3]])
+    assert {1, 2, 3} <= c.contents()
+    # second batch should be all hits
+    _, hit = c.lookup(np.array([1, 2, 3], np.int32))
+    assert np.asarray(hit).all()
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu", "fifo"])
+def test_capacity_and_uniqueness(policy):
+    c = FeatureCache(capacity=8, dim=4, id_space=1000, policy=policy,
+                     lam=1.0)
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        _drive(c, [rng.integers(0, 1000, 6)], dim=4)
+        ids = np.asarray(c.state.ids)
+        live = ids[ids != NULL]
+        assert len(live) <= 8
+        assert len(np.unique(live)) == len(live)
+        # slot_of consistent with ids
+        for s, i in enumerate(ids):
+            if i != NULL:
+                assert int(np.asarray(c.state.slot_of)[i]) == s
+
+
+def test_lru_evicts_least_recent():
+    c = FeatureCache(capacity=4, dim=4, id_space=100, policy="lru",
+                     lam=0.5)  # max 2 replacements per update
+    _drive(c, [[0, 1], [2, 3]], dim=4)     # full: 0,1 older than 2,3
+    _drive(c, [[0, 1]], dim=4)             # touch 0,1 (now most recent)
+    _drive(c, [[4, 5]], dim=4)             # evicts 2,3
+    assert {0, 1, 4, 5} == c.contents()
+
+
+def test_lfu_keeps_frequent():
+    c = FeatureCache(capacity=4, dim=4, id_space=100, policy="lfu",
+                     lam=0.5)
+    _drive(c, [[0, 1], [2, 3]], dim=4)
+    for _ in range(5):
+        _drive(c, [[0, 1]], dim=4)         # 0,1 become high-frequency
+    _drive(c, [[6, 7]], dim=4)
+    assert {0, 1} <= c.contents()
+    assert not ({2, 3} <= c.contents())
+
+
+def test_fifo_ring_order():
+    c = FeatureCache(capacity=4, dim=4, id_space=100, policy="fifo",
+                     lam=0.5)
+    _drive(c, [[0, 1], [2, 3]], dim=4)
+    _drive(c, [[0, 1]] * 3, dim=4)         # hits don't move FIFO order
+    _drive(c, [[4, 5]], dim=4)             # evicts oldest inserted: 0,1
+    assert {2, 3, 4, 5} == c.contents()
+
+
+def test_lambda_quota_limits_replacement():
+    c = FeatureCache(capacity=10, dim=4, id_space=200, policy="lru",
+                     lam=0.2)  # at most 2 replacements per update
+    _drive(c, [list(range(10))], dim=4)    # warm: at most 2 inserted!
+    assert len(c.contents()) == 2
+    before = c.contents()
+    _drive(c, [list(range(100, 110))], dim=4)
+    after = c.contents()
+    assert len(after - before) <= 2
+
+
+def test_reuse_and_restore():
+    c = FeatureCache(capacity=8, dim=4, id_space=100, policy="lru",
+                     lam=1.0)
+    _drive(c, [[0, 1, 2, 3]], dim=4)
+    c.snapshot_round()
+    round_contents = c.contents()
+    _drive(c, [[10, 11, 12, 13, 14, 15, 16, 17]], dim=4)  # pollute
+    assert c.contents() != round_contents
+    c.restore_epoch()
+    assert c.contents() == round_contents
+    # cross-round reuse via host blob
+    blob = c.save_host()
+    c2 = FeatureCache.load_host(blob, policy="lru", lam=1.0)
+    assert c2.contents() == round_contents
+    _, hit = c2.lookup(np.array([0, 1, 2, 3], np.int32))
+    assert np.asarray(hit).all()
+
+
+def test_hit_rate_accounting():
+    c = FeatureCache(capacity=8, dim=4, id_space=100, policy="lru",
+                     lam=1.0)
+    _drive(c, [[0, 1, 2, 3]], dim=4)       # 4 misses
+    _drive(c, [[0, 1, 2, 3]], dim=4)       # 4 hits
+    assert abs(c.hit_rate - 0.5) < 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["lru", "lfu", "fifo"]),
+       st.sampled_from([0.2, 0.5, 1.0]))
+def test_property_against_model(seed, policy, lam):
+    """Invariants vs a dict model of 'currently cached' contents."""
+    rng = np.random.default_rng(seed)
+    cap = int(rng.integers(2, 16))
+    c = FeatureCache(capacity=cap, dim=4, id_space=64, policy=policy,
+                     lam=lam)
+    model = set()
+    R = c.max_replace
+    for _ in range(12):
+        ids = rng.integers(0, 64, int(rng.integers(1, 10)))
+        _, hit = c.lookup(np.asarray(ids, np.int32))
+        hit = np.asarray(hit)
+        # hits must be exactly membership in the model
+        for x, h in zip(ids, hit):
+            assert h == (int(x) in model), (ids, model)
+        c.update(np.asarray(ids, np.int32), hit, _feat(ids, 4))
+        # model update: distinct misses, first-occurrence order, quota R
+        seen = []
+        for x in ids:
+            if int(x) not in model and int(x) not in seen:
+                seen.append(int(x))
+        inserted = seen[:R]
+        model = c.contents()               # resync (eviction is policy's)
+        for x in inserted:
+            assert x in model, (x, inserted, model)
+        assert len(model) <= cap
+
+
+def test_pallas_cache_gather_matches_ref():
+    from repro.kernels.cache_gather.ops import cache_gather_pallas
+    from repro.kernels.cache_gather.ref import cache_gather_ref
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(1)
+    for (C, D, M, N) in [(8, 4, 50, 7), (32, 16, 200, 33),
+                         (16, 128, 100, 5)]:
+        slot_of = np.full(M, NULL, np.int32)
+        slot_ids = np.full(C, NULL, np.int32)
+        occupied = rng.choice(M, C // 2, replace=False)
+        for s, i in enumerate(occupied):
+            slot_of[i] = s
+            slot_ids[s] = i
+        feats = rng.normal(size=(C, D)).astype(np.float32)
+        ids = rng.integers(-1, M, N).astype(np.int32)
+        got = cache_gather_pallas(jnp.asarray(slot_of),
+                                  jnp.asarray(slot_ids),
+                                  jnp.asarray(feats), jnp.asarray(ids))
+        exp = cache_gather_ref(jnp.asarray(slot_of),
+                               jnp.asarray(slot_ids),
+                               jnp.asarray(feats), jnp.asarray(ids))
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(exp[1]))
+        np.testing.assert_allclose(np.asarray(got[0]),
+                                   np.asarray(exp[0]), rtol=1e-6)

@@ -1,0 +1,132 @@
+"""Layer-level equivalence + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (apply_rope, blocked_attention,
+                                 chunked_softmax_xent, decode_attention,
+                                 direct_attention, rms_norm, time_encode,
+                                 time_encode_params)
+
+
+def _qkv(B, Sq, Skv, Hq, Hkv, D, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Skv, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Skv, Hkv, D)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("shape", [(2, 32, 32, 4, 2, 16),
+                                   (1, 64, 64, 8, 8, 8),
+                                   (3, 24, 24, 6, 3, 16)])
+def test_blocked_equals_direct(causal, shape):
+    q, k, v = _qkv(*shape)
+    got = blocked_attention(q, k, v, causal=causal, q_chunk=8, kv_chunk=8)
+    exp = direct_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_attention_odd_sizes():
+    """Non-chunk-multiple S exercises the padding path."""
+    q, k, v = _qkv(2, 37, 37, 4, 2, 16, seed=1)
+    got = blocked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    exp = direct_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_masked_full():
+    """Decode against a padded cache == full attention on the valid
+    prefix."""
+    B, S, Hq, Hkv, D = 2, 16, 4, 2, 8
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    valid = jnp.asarray([5, 9])
+    got = decode_attention(q, k, v, valid_len=valid)
+    for b in range(B):
+        n = int(valid[b])
+        exp = direct_attention(q[b:b + 1], k[b:b + 1, :n],
+                               v[b:b + 1, :n], causal=False)
+        np.testing.assert_allclose(np.asarray(got[b]),
+                                   np.asarray(exp[0]), rtol=2e-5,
+                                   atol=2e-5)
+
+
+def test_chunked_ce_equals_naive():
+    B, S, d, V = 8, 16, 32, 50
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(size=(B, S, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    valid = jnp.asarray(rng.random((B, S)) < 0.8)
+    loss, cnt = chunked_softmax_xent(h, w, labels, valid, n_chunks=4)
+    logits = (h @ w).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    naive = jnp.sum(jnp.where(valid, lse - gold, 0)) / valid.sum()
+    np.testing.assert_allclose(float(loss), float(naive), rtol=1e-5)
+    assert int(cnt) == int(valid.sum())
+    # gradients agree too (the jax.checkpoint path)
+    g1 = jax.grad(lambda hh: chunked_softmax_xent(hh, w, labels,
+                                                  valid)[0])(h)
+    g2 = jax.grad(lambda hh: jnp.sum(jnp.where(
+        valid, jax.nn.logsumexp((hh @ w).astype(jnp.float32), -1)
+        - jnp.take_along_axis((hh @ w).astype(jnp.float32),
+                              labels[..., None], -1)[..., 0], 0))
+        / valid.sum())(h)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relative_positions():
+    B, S, H, D = 2, 16, 2, 16
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    pos = jnp.arange(S)
+    y = apply_rope(x, pos, 1e4)
+    # rotation preserves per-head norms
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # dot(q_i, k_j) depends only on i - j: shift both positions
+    q = apply_rope(x, pos, 1e4)
+    k = apply_rope(x, pos, 1e4)
+    q2 = apply_rope(x, pos + 7, 1e4)
+    k2 = apply_rope(x, pos + 7, 1e4)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", q, k)
+    s2 = jnp.einsum("bqhd,bkhd->bhqk", q2, k2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_rms_norm_properties(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 32)) * rng.uniform(0.1, 10),
+                    jnp.float32)
+    w = jnp.ones((32,), jnp.float32)
+    y = np.asarray(rms_norm(x, w))
+    # unit RMS rows
+    np.testing.assert_allclose(np.sqrt((y ** 2).mean(-1)), 1.0,
+                               rtol=1e-3)
+    # scale invariance
+    y2 = np.asarray(rms_norm(x * 3.7, w))
+    np.testing.assert_allclose(y, y2, rtol=1e-4, atol=1e-5)
+
+
+def test_time_encode_bounded_and_distinguishes_scales():
+    p = time_encode_params(jax.random.PRNGKey(0), 32)
+    dts = jnp.asarray([0.0, 1.0, 100.0, 1e6])
+    enc = np.asarray(time_encode(dts, p["w"], p["b"]))
+    assert (np.abs(enc) <= 1.0 + 1e-6).all()
+    # distinct time deltas -> distinct codes
+    d = np.linalg.norm(enc[:, None] - enc[None, :], axis=-1)
+    assert (d[np.triu_indices(4, 1)] > 1e-3).all()
