@@ -27,7 +27,18 @@ def main() -> None:
         "scaling": bench_scaling.run,                # Fig.15 / Tab.7
         "roofline": bench_roofline.run,              # deliverable (g)
     }
+    if args.only is not None and not args.only:
+        print("--only given without bench names; available: "
+              f"{', '.join(benches)}", file=sys.stderr)
+        sys.exit(2)
+    unknown = set(args.only or []) - benches.keys()
+    if unknown:
+        print(f"unknown bench names: {', '.join(sorted(unknown))}; "
+              f"available: {', '.join(benches)}", file=sys.stderr)
+        sys.exit(2)
+
     print("name,us_per_call,derived")
+    failed = []
     for name, fn in benches.items():
         if args.only and name not in args.only:
             continue
@@ -39,8 +50,12 @@ def main() -> None:
                   file=sys.stdout)
             import traceback
             traceback.print_exc(file=sys.stderr)
+            failed.append(name)
         print(f"# {name} done in {time.time() - t0:.1f}s",
               file=sys.stderr)
+    if failed:
+        print(f"# FAILED: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,10 @@
+"""Distributed substrate: logical-axis sharding rules + gradient collectives.
+
+``repro.dist.sharding``    mesh/rules context, logical-axis constraints,
+                           FSDP gather, partition-spec assignment.
+``repro.dist.collectives`` gradient-reduction primitives (bucketed /
+                           quantized / top-k sparsified psum).
+"""
+from repro.dist import collectives, sharding  # noqa: F401
+
+__all__ = ["collectives", "sharding"]

@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.configs.base import MoEConfig
 from repro.dist.sharding import (active_mesh, axis_for, axis_size_of,
-                                 constrain)
+                                 constrain, shard_map)
 from repro.models.layers import dense_init, mlp_apply
 
 
@@ -187,10 +187,6 @@ def _moe_local_shard(params, x, moe: MoEConfig, act: str, ep_names,
 
     Bl, Sl, d = x.shape
     E, k = moe.num_experts, moe.top_k
-    ep = 1
-    for nm in ep_names:
-        ep *= lax.axis_size(nm)
-    E_loc = E // ep
     T = Bl * Sl
     C = max(4, int(np.ceil(k * T * moe.capacity_factor / E)))
 
@@ -286,7 +282,7 @@ def _moe_apply_ep(params: dict, x: jnp.ndarray, moe: MoEConfig, act: str
         else:
             pspecs[name] = pspec(name, leaf)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda p, xx: _moe_local_shard(p, xx, moe, act, ep_names,
                                        all_names),
         mesh=mesh, in_specs=(pspecs, x_spec),

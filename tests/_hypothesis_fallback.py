@@ -1,0 +1,100 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is absent.
+
+Loaded by ``tests/conftest.py`` into ``sys.modules['hypothesis']`` only
+when ``import hypothesis`` fails (hermetic containers without the test
+extra installed). Implements just the API slice this suite uses:
+``@given`` over deterministic pseudo-random draws, ``@settings``, and
+the ``integers`` / ``sampled_from`` / ``booleans`` / ``floats`` /
+``just`` strategies. It is NOT a property-testing engine — no shrinking,
+no example database, no health checks — so install the real package
+(``pip install -e '.[test]'``) for serious fuzzing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+from typing import Any, Callable, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements: Sequence[Any]) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored: Any) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def just(value: Any) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored: Any):
+    """Records max_examples on the (already @given-wrapped) function."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies_: _Strategy):
+    """Run the test once per drawn example (deterministic seed).
+
+    Drawn values fill the test's trailing positional parameters, like
+    real hypothesis; any leading parameters stay visible to pytest so
+    fixtures keep working.
+    """
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters.values())
+        n_drawn = len(strategies_)
+        outer = params[:len(params) - n_drawn]
+        drawn_names = [p.name for p in params[len(params) - n_drawn:]]
+
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                # bind drawn values by name: pytest passes fixtures as
+                # keywords, so positional filling would collide
+                drawn = {nm: s.example_from(rng)
+                         for nm, s in zip(drawn_names, strategies_)}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature(outer)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+strategies.floats = floats
+strategies.just = just

@@ -2,7 +2,6 @@
 devices, subprocess for the placeholder-device flag)."""
 import subprocess
 import sys
-from pathlib import Path
 
 _SCRIPT = '''
 import os
@@ -54,12 +53,9 @@ print("CP==REF OK")
 '''
 
 
-def test_cp_attention_matches_blocked():
-    repo = Path(__file__).resolve().parent.parent
+def test_cp_attention_matches_blocked(subprocess_env):
     r = subprocess.run(
-        [sys.executable, "-c", _SCRIPT],
-        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+        [sys.executable, "-c", _SCRIPT], env=subprocess_env,
         capture_output=True, text=True, timeout=420)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "CP==REF OK" in r.stdout

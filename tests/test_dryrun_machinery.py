@@ -5,7 +5,6 @@ version of deliverable (e)."""
 import json
 import subprocess
 import sys
-from pathlib import Path
 
 _SCRIPT = '''
 import os
@@ -59,12 +58,9 @@ print("DRYRUN_SMALL " + json.dumps(out))
 '''
 
 
-def test_reduced_dryrun_all_families():
-    repo = Path(__file__).resolve().parent.parent
+def test_reduced_dryrun_all_families(subprocess_env):
     r = subprocess.run(
-        [sys.executable, "-c", _SCRIPT],
-        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+        [sys.executable, "-c", _SCRIPT], env=subprocess_env,
         capture_output=True, text=True, timeout=900)
     assert r.returncode == 0, r.stderr[-4000:]
     line = [l for l in r.stdout.splitlines()

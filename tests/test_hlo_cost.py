@@ -57,7 +57,10 @@ def test_flops_scale_with_trip_count(compiled_text):
     hi = (3.5 * layer * L + 4 * logits) * 1.2
     assert lo <= got <= hi, (got, lo, hi)
     # and it must exceed XLA's own loop-undercounting estimate
+    # (cost_analysis returns a per-device list on some jax versions)
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     if ca and ca.get("flops", 0) > 0:
         assert got > 0.9 * float(ca["flops"])
 
@@ -68,7 +71,10 @@ def test_trip_counts_found(compiled_text):
     comps = parse_hlo(txt)
     entry = comps["__entry__"]
     trips = [m for _, m, _ in entry.calls if m > 1]
-    assert trips and max(trips) == 4          # L = 4 scan
+    # the L = 4 scan loop must be found; some XLA versions serialize
+    # additional ops (e.g. the embedding-grad scatter) into their own
+    # while loops, so other trip counts may legitimately appear too
+    assert 4.0 in trips, trips
 
 
 def test_collective_free_on_one_device(compiled_text):

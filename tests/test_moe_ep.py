@@ -5,7 +5,6 @@ before jax initializes (same rule as the dry-run).
 """
 import subprocess
 import sys
-from pathlib import Path
 
 _SCRIPT = r"""
 import os
@@ -67,12 +66,9 @@ print("EP==DENSE OK")
 """
 
 
-def test_ep_matches_dense_on_fake_mesh():
-    repo = Path(__file__).resolve().parent.parent
+def test_ep_matches_dense_on_fake_mesh(subprocess_env):
     r = subprocess.run(
-        [sys.executable, "-c", _SCRIPT],
-        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+        [sys.executable, "-c", _SCRIPT], env=subprocess_env,
         capture_output=True, text=True, timeout=420)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "EP==DENSE OK" in r.stdout
