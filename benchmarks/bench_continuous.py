@@ -7,6 +7,7 @@ synthetic stream with TGN and TGAT; reports per-round wall time split
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -18,6 +19,9 @@ from repro.data.events import synth_ctdg
 
 
 def run(quick: bool = True) -> None:
+    # BENCH_QUICK=1 (CI smoke): skip the epoch/replay sweeps, keep the
+    # per-round timings that feed BENCH_continuous.json
+    smoke = os.environ.get("BENCH_QUICK", "") not in ("", "0")
     stream = synth_ctdg(n_nodes=2_000, n_events=24_000, t_span=100_000,
                         d_node=16, d_edge=12, drift_every=25_000, seed=5)
     warm = 12_000
@@ -46,8 +50,15 @@ def run(quick: bool = True) -> None:
             emit(f"continuous/{model}/round{r}", times[-1] * 1e6,
                  f"ap={m.ap:.3f};ingest={m.ingest_s:.2f}s;"
                  f"sample={m.sample_s:.2f}s;fetch={m.fetch_s:.2f}s;"
-                 f"train={m.train_s:.2f}s")
-        results[model] = {"ap_per_round": aps, "round_s": times}
+                 f"train={m.train_s:.2f}s;"
+                 f"refresh_kB={m.refresh_bytes / 1e3:.0f}")
+        results[model] = {"ap_per_round": aps, "round_s": times,
+                          "refresh_bytes_last_round": m.refresh_bytes}
+
+    if smoke:
+        results["paper_claim"] = "sweeps skipped (BENCH_QUICK=1)"
+        save_json("continuous", results)
+        return
 
     # ---- finetune-epoch sweep (Fig. 10) ----
     sweep = {}

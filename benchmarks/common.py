@@ -23,8 +23,10 @@ def rows() -> List[str]:
 
 
 def save_json(name: str, payload: Dict) -> None:
+    """Write ``artifacts/bench/BENCH_<name>.json`` — the per-bench
+    artifact CI uploads so the perf trajectory is tracked PR over PR."""
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
-    (ARTIFACTS / f"{name}.json").write_text(
+    (ARTIFACTS / f"BENCH_{name}.json").write_text(
         json.dumps(payload, indent=2, default=str))
 
 

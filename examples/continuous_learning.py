@@ -53,7 +53,8 @@ def main() -> None:
         aps.append(m.ap)
         print(f"[round {r}] events={len(batch)} pre-AP={m.ap:.3f} "
               f"loss={m.loss:.4f} total="
-              f"{m.ingest_s + m.sample_s + m.fetch_s + m.train_s:.2f}s")
+              f"{m.ingest_s + m.sample_s + m.fetch_s + m.train_s:.2f}s "
+              f"refresh={m.refresh_bytes / 1e3:.0f}kB")
         # checkpoint the trainable state + stream cursor
         ckpt.save(r, {"params": tr.params, "opt": tr.opt_state},
                   extra={"round": r})

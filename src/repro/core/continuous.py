@@ -129,6 +129,7 @@ class RoundMetrics:
     train_s: float
     node_hit_rate: float
     edge_hit_rate: float
+    refresh_bytes: int = 0    # H2D payload of this round's device refresh
 
 
 class ContinuousTrainer:
@@ -182,6 +183,7 @@ class ContinuousTrainer:
         self._build_steps()
         self.timers = {"sample": 0.0, "fetch": 0.0, "train": 0.0,
                        "ingest": 0.0}
+        self._refresh_bytes = 0
 
     # -- jitted steps ----------------------------------------------------
     def _build_steps(self) -> None:
@@ -253,7 +255,9 @@ class ContinuousTrainer:
             self._snap = build_snapshot(self.graph)
         else:
             self._snap = refresh_snapshot(self.graph, self._snap)
+        # delta-upload: only the changed snapshot rows go to the device
         self.sampler.refresh(self._snap)
+        self._refresh_bytes += self.sampler.last_refresh_bytes
         dt = time.perf_counter() - t0
         self.timers["ingest"] += dt
         return dt
@@ -327,6 +331,7 @@ class ContinuousTrainer:
         """Paper §3: evaluate-then-finetune on one incremental batch."""
         for k in self.timers:
             self.timers[k] = 0.0
+        self._refresh_bytes = 0
         self.node_cache.reset_stats()
         self.edge_cache.reset_stats()
 
@@ -365,7 +370,8 @@ class ContinuousTrainer:
             ingest_s=self.timers["ingest"], sample_s=self.timers["sample"],
             fetch_s=self.timers["fetch"], train_s=train_s,
             node_hit_rate=self.node_cache.hit_rate,
-            edge_hit_rate=self.edge_cache.hit_rate)
+            edge_hit_rate=self.edge_cache.hit_rate,
+            refresh_bytes=self._refresh_bytes)
 
     def _eids_for(self, src, dst, ts) -> np.ndarray:
         """Edge ids of just-ingested events (assigned sequentially)."""

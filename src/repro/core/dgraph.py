@@ -147,43 +147,22 @@ class DynamicGraph:
     # block allocation (adaptive sizing lives here)
     # ------------------------------------------------------------------
 
-    def _block_capacity(self, node: int, incoming: int) -> int:
+    def _block_caps(self, nodes: np.ndarray,
+                    incoming: np.ndarray) -> np.ndarray:
+        """Vectorized new-block capacities for `nodes` about to receive
+        `incoming` more edges — the adaptive sizing (paper §4.1):
+        b_v = min(deg(v), tau), floored to avoid degenerate blocks."""
         if self.block_policy == "adaptive":
-            # b_v = min(deg(v), tau), floored to avoid degenerate blocks
-            b = min(max(int(self.degree[node]) + incoming,
-                        self.min_block), self.tau)
+            caps = np.minimum(
+                np.maximum(self.degree[nodes] + incoming,
+                           self.min_block), self.tau)
         elif self.block_policy == "fixed":
-            b = self.tau
+            caps = np.full(len(nodes), self.tau, np.int64)
         elif self.block_policy == "strawman":
-            b = max(incoming, 1)          # block per incremental batch
+            caps = np.maximum(incoming, 1)   # block per incremental batch
         else:  # adjlist: one edge per "block"
-            b = 1
-        return max(b, 1)
-
-    def _alloc_block(self, node: int, incoming: int) -> int:
-        cap = self._block_capacity(node, incoming)
-        self._ensure_blocks(1)
-        self._ensure_arena(cap)
-        b = self.n_blocks
-        self.n_blocks += 1
-        self.blk_cap[b] = cap
-        self.blk_size[b] = 0
-        self.blk_tmin[b] = np.inf
-        self.blk_tmax[b] = -np.inf
-        self.blk_node[b] = node
-        self.blk_start[b] = self.arena_used
-        self.arena_used += cap
-        # link at tail
-        t = self.tail[node]
-        self.blk_prev[b] = t
-        self.blk_next[b] = NULL
-        if t != NULL:
-            self.blk_next[t] = b
-        else:
-            self.head[node] = b
-        self.tail[node] = b
-        self.nblocks[node] += 1
-        return b
+            caps = np.ones(len(nodes), np.int64)
+        return np.maximum(caps, 1)
 
     # ------------------------------------------------------------------
     # mutation API
@@ -237,96 +216,126 @@ class DynamicGraph:
         self._insert_bulk(np.full(len(nbrs), node, np.int64), nbrs, tss,
                           eids)
 
-    def _alloc_blocks_bulk(self, nodes: np.ndarray,
-                           incoming: np.ndarray) -> np.ndarray:
-        """Vectorized tail-block allocation for distinct `nodes`."""
-        n = len(nodes)
-        if self.block_policy == "adaptive":
-            caps = np.minimum(
-                np.maximum(self.degree[nodes] + incoming,
-                           self.min_block), self.tau)
-        elif self.block_policy == "fixed":
-            caps = np.full(n, self.tau, np.int64)
-        elif self.block_policy == "strawman":
-            caps = np.maximum(incoming, 1)
-        else:  # adjlist
-            caps = np.ones(n, np.int64)
-        caps = np.maximum(caps, 1)
-
-        self._ensure_blocks(n)
-        self._ensure_arena(int(caps.sum()))
-        bids = self.n_blocks + np.arange(n, dtype=np.int64)
-        starts = self.arena_used + np.concatenate(
-            [[0], np.cumsum(caps)[:-1]])
-        self.blk_cap[bids] = caps
-        self.blk_size[bids] = 0
-        self.blk_tmin[bids] = np.inf
-        self.blk_tmax[bids] = -np.inf
-        self.blk_node[bids] = nodes
-        self.blk_start[bids] = starts
-        prev = self.tail[nodes]
-        self.blk_prev[bids] = prev
-        self.blk_next[bids] = NULL
-        has_prev = prev != NULL
-        self.blk_next[prev[has_prev]] = bids[has_prev]
-        self.head[nodes[~has_prev]] = bids[~has_prev]
-        self.tail[nodes] = bids
-        self.nblocks[nodes] += 1
-        self.arena_used += int(caps.sum())
-        self.n_blocks += n
-        return bids
-
     def _insert_bulk(self, src: np.ndarray, dst: np.ndarray,
                      tss: np.ndarray, eids: np.ndarray) -> None:
         """Vectorized grouped insertion. `src` must be grouped by node
-        (chronological within each group)."""
-        remaining = len(src)
-        grp_starts = None
-        while remaining:
-            uniq, starts, counts = np.unique(src, return_index=True,
-                                             return_counts=True)
-            tails = self.tail[uniq]
-            has_tail = tails != NULL
-            safe_tails = np.maximum(tails, 0)
-            room = np.where(
-                has_tail & ~self.blk_offloaded[safe_tails],
-                self.blk_cap[safe_tails] - self.blk_size[safe_tails], 0)
-            need = uniq[room <= 0]
-            if len(need):
-                self._alloc_blocks_bulk(need, counts[room <= 0])
-                tails = self.tail[uniq]
-                room = self.blk_cap[tails] - self.blk_size[tails]
+        (chronological within each group).
 
-            take = np.minimum(room, counts)
-            # per-row rank within its node group
-            group_of = np.repeat(np.arange(len(uniq)), counts)
-            within = np.arange(len(src)) - np.repeat(starts, counts)
-            use = within < take[group_of]
-            pos = (self.blk_start[tails] + self.blk_size[tails]
-                   )[group_of] + within
+        Two loop-free phases: (1) fill the room left in each node's tail
+        block; (2) bulk-allocate ALL remaining blocks in one shot and
+        scatter the leftover rows into them. Phase 2 is exact w.r.t. the
+        one-block-at-a-time allocation because within one batch every new
+        block of a node gets the same capacity under every block policy
+        (adaptive caps at min(max(final_degree, min_block), tau), which
+        doesn't change between a node's consecutive allocations)."""
+        total = len(src)
+        if not total:
+            return
+        uniq, starts, counts = np.unique(src, return_index=True,
+                                         return_counts=True)
+        tails = self.tail[uniq]
+        has_tail = tails != NULL
+        safe_tails = np.maximum(tails, 0)
+        room = np.where(
+            has_tail & ~self.blk_offloaded[safe_tails],
+            self.blk_cap[safe_tails] - self.blk_size[safe_tails], 0)
+        take0 = np.minimum(room, counts)
+        # per-row rank within its node group
+        group_of = np.repeat(np.arange(len(uniq)), counts)
+        within = np.arange(total) - np.repeat(starts, counts)
+        use = within < take0[group_of]
+        if use.any():
+            pos = (self.blk_start[safe_tails]
+                   + self.blk_size[safe_tails])[group_of] + within
             p = pos[use]
             self.nbr[p] = dst[use]
             self.eid[p] = eids[use]
             self.ts[p] = tss[use]
             self.valid[p] = True
             # block bookkeeping (vectorized): first/last inserted ts
-            took = take > 0
+            took = take0 > 0
             tk = tails[took]
             first_t = tss[starts[took]]
-            last_t = tss[starts[took] + take[took] - 1]
+            last_t = tss[starts[took] + take0[took] - 1]
             self.blk_tmin[tk] = np.minimum(self.blk_tmin[tk], first_t)
             self.blk_tmax[tk] = np.maximum(self.blk_tmax[tk], last_t)
-            self.blk_size[tk] += take[took]
-            self.degree[uniq] += take
-            # next round: leftover rows only
-            src, dst, tss, eids = (src[~use], dst[~use], tss[~use],
-                                   eids[~use])
-            remaining = len(src)
+            self.blk_size[tk] += take0[took]
+        self.degree[uniq] += take0
+
+        left = counts - take0
+        need = left > 0
+        if not need.any():
+            return
+        nodes2 = uniq[need]
+        left2 = left[need]
+        # capacity of every new block this batch (identical per node)
+        caps = self._block_caps(nodes2, left2)
+        nblk = -(-left2 // caps)                      # ceil per node
+
+        n_new = int(nblk.sum())
+        self._ensure_blocks(n_new)
+        caps_r = np.repeat(caps, nblk)
+        self._ensure_arena(int(caps_r.sum()))
+        b0 = self.n_blocks
+        bids = b0 + np.arange(n_new, dtype=np.int64)
+        nodes_r = np.repeat(nodes2, nblk)
+        starts_r = self.arena_used + np.concatenate(
+            [[0], np.cumsum(caps_r)[:-1]]).astype(np.int64)
+        self.blk_cap[bids] = caps_r
+        self.blk_size[bids] = 0
+        self.blk_tmin[bids] = np.inf
+        self.blk_tmax[bids] = -np.inf
+        self.blk_node[bids] = nodes_r
+        self.blk_start[bids] = starts_r
+        # chain links: consecutive new blocks of a node link to each
+        # other; the first links to the node's current tail
+        grp_first = b0 + np.concatenate(
+            [[0], np.cumsum(nblk)[:-1]]).astype(np.int64)
+        grp_last = grp_first + nblk - 1
+        prev = bids - 1
+        nxt = bids + 1
+        first_mask = np.zeros(n_new, bool)
+        first_mask[grp_first - b0] = True
+        last_mask = np.zeros(n_new, bool)
+        last_mask[grp_last - b0] = True
+        tails2 = self.tail[nodes2]
+        prev[first_mask] = tails2
+        nxt[last_mask] = NULL
+        self.blk_prev[bids] = prev
+        self.blk_next[bids] = nxt
+        has_t2 = tails2 != NULL
+        self.blk_next[tails2[has_t2]] = grp_first[has_t2]
+        self.head[nodes2[~has_t2]] = grp_first[~has_t2]
+        self.tail[nodes2] = grp_last
+        self.nblocks[nodes2] += nblk
+        self.arena_used += int(caps_r.sum())
+        self.n_blocks += n_new
+
+        # scatter leftover rows: row r of a node's leftovers goes to
+        # block r // cap, lane r % cap (chronological order preserved)
+        rows = ~use
+        need_idx = np.cumsum(need) - 1                # group -> nodes2 pos
+        j = need_idx[group_of[rows]]
+        w2 = within[rows] - take0[group_of[rows]]
+        c = caps[j]
+        bid = grp_first[j] + w2 // c
+        pos = self.blk_start[bid] + w2 % c
+        self.nbr[pos] = dst[rows]
+        self.eid[pos] = eids[rows]
+        self.ts[pos] = tss[rows]
+        self.valid[pos] = True
+        self.blk_size[bids] = np.bincount(bid - b0, minlength=n_new)
+        np.minimum.at(self.blk_tmin, bid, tss[rows])
+        np.maximum.at(self.blk_tmax, bid, tss[rows])
+        self.degree[nodes2] += left2
 
     def delete_edges(self, eids: Iterable[int]) -> int:
         """Mark edges invalid (validity flip; layout untouched)."""
-        eids = set(int(e) for e in eids)
-        hits = np.isin(self.eid[:self.arena_used], list(eids))
+        arr = (eids if isinstance(eids, np.ndarray)
+               else np.fromiter(eids, np.int64))
+        # arena eids are NOT unique (undirected stores both endpoints),
+        # so only the query side may claim uniqueness
+        hits = np.isin(self.eid[:self.arena_used], np.unique(arr))
         hits &= self.valid[:self.arena_used]
         self.valid[:self.arena_used][hits] = False
         self._snapshot_dirty = True

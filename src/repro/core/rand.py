@@ -1,0 +1,26 @@
+"""Shared sampling-noise primitives.
+
+Lives in its own module (rather than core.sampling) so the kernel
+package can import it at module level without creating an import cycle
+with core.sampling, whose import of kernels.temporal_sample is
+deliberately lazy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gumbel_noise(rng_key, shape):
+    """I.i.d. Gumbel scores for top-k sampling without replacement.
+
+    Single definition shared by the jnp sampler hop, the Pallas kernel
+    wrapper, and the kernel tests. The kernel-vs-reference agreement
+    contract requires the kernel wrapper and the reference to draw
+    bit-identical noise from it for the same key. (The jnp hop and the
+    Pallas path are NOT draw-for-draw identical for the same seed —
+    they assign the stream to candidates in different lane orders, which
+    leaves the distribution unchanged but not the individual draws.)
+    """
+    return -jnp.log(-jnp.log(
+        jax.random.uniform(rng_key, shape, minval=1e-9, maxval=1.0)))

@@ -7,17 +7,22 @@ Three interchangeable implementations (tests assert agreement):
   * ``TemporalSampler``   — vectorized jnp path over the paged snapshot:
                             one gather of the newest `scan_pages` pages per
                             target, masked window intersection on the VPU,
-                            newest-K (recent) or Gumbel-top-k (uniform)
-                            selection. This is the TPU-native re-derivation
-                            of the paper's warp-per-target binary-search
-                            kernel: scalar binary search becomes a masked
-                            vector compare over 128-lane pages.
-  * Pallas kernel         — kernels/temporal_sample (recent policy), used
-                            via ``use_pallas=True`` and validated in
-                            interpret mode against both paths.
+                            masked top-k selection (newest-K for recent,
+                            Gumbel-top-k for uniform — both O(W log k)).
+                            This is the TPU-native re-derivation of the
+                            paper's warp-per-target binary-search kernel:
+                            scalar binary search becomes a masked vector
+                            compare over 128-lane pages.
+  * Pallas kernel         — kernels/temporal_sample (recent + uniform
+                            policies), used via ``use_pallas=True`` and
+                            validated in interpret mode against both paths.
 
 Static shapes: every hop pads targets to a fixed budget and returns masked
-(N, K) neighbor tiles, so the whole GNN step jits once per shape.
+(N, K) neighbor tiles, so the whole GNN step jits once per shape. The
+entire k-hop loop is ONE jitted dispatch (``_sample_khop``): intermediate
+targets/times/masks never leave the device, and the paged snapshot itself
+is device-resident — ``refresh()`` applies SnapshotDeltas as in-place
+donated row updates rather than re-uploading (README "Sampling pipeline").
 
 Bounded work note: device paths scan the newest ``scan_pages`` pages per
 target (kernel-friendly bounded work, recency-biased truncation for very
@@ -27,6 +32,7 @@ block sizing a hub node's page holds ``tau`` edges, so 16 pages cover
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import List, Optional, Sequence, Tuple
@@ -36,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dgraph import DynamicGraph, NULL
+from repro.core.rand import gumbel_noise
 from repro.core.snapshot import GraphSnapshot, build_snapshot
 
 
@@ -119,22 +126,30 @@ def oracle_sample(g: DynamicGraph, seeds: np.ndarray, seed_ts: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Vectorized device path
+# Vectorized device path (fused k-hop dispatch)
 # ---------------------------------------------------------------------------
 
+# Incremented once per *trace* of the fused k-hop dispatch — steady-state
+# sampling must not retrace, so tests use this as a dispatch-count probe.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "policy", "scan_pages", "with_replacement"))
-def _sample_hop_jnp(page_table, page_size, page_tmin, page_tmax,
-                    pages_nbr, pages_eid, pages_ts, pages_valid,
-                    targets, t_end, t_start, tmask, rng_key, *,
-                    k: int, policy: str, scan_pages: int,
-                    with_replacement: bool = False):
-    """One hop for N targets. All page arrays are device-resident.
 
-    Returns (nbr (N,k), eid (N,k), ts (N,k), mask (N,k)).
+@functools.lru_cache(maxsize=1)
+def _zero_key():
+    """Constant key threaded through deterministic-policy dispatches (the
+    rng argument is dead code there and DCE'd by jit)."""
+    return jax.random.PRNGKey(0)
+
+
+def _hop_jnp(dev, targets, t_end, t_start, tmask, rng_key, *,
+             k: int, policy: str, scan_pages: int):
+    """One hop for N targets over device-resident page arrays.
+
+    Returns (nbr (N,k), eid (N,k), ts (N,k), mask (N,k)). Traced inside
+    the fused dispatch — not jitted on its own.
     """
+    page_table = dev["page_table"]
+    pages_ts = dev["pages_ts"]
     N = targets.shape[0]
     page_cap = pages_ts.shape[1]
     in_range = (targets >= 0) & (targets < page_table.shape[0])
@@ -143,18 +158,16 @@ def _sample_hop_jnp(page_table, page_size, page_tmin, page_tmax,
     pvalid = (pt != NULL) & (tmask & in_range)[:, None]
     ptc = jnp.clip(pt, 0, pages_ts.shape[0] - 1)
 
-    # page-level window intersection (paper: skip blocks outside range)
-    tmin = page_tmin[ptc]
-    tmax = page_tmax[ptc]
-    p_hit = pvalid & (tmin < t_end[:, None]) & (tmax >= t_start[:, None])
-
-    # gather page lanes, newest-first within page (pages are ascending ts)
-    nbr = pages_nbr[ptc][:, :, ::-1]                      # (N, S, C)
-    eid = pages_eid[ptc][:, :, ::-1]
+    # gather page lanes, newest-first within page (pages are ascending
+    # ts). The paper's page-level t_min/t_max skip is subsumed by the
+    # per-lane window tests below — a dense vectorized gather computes
+    # every lane anyway, so the prefilter bought nothing.
+    nbr = dev["pages_nbr"][ptc][:, :, ::-1]               # (N, S, C)
+    eid = dev["pages_eid"][ptc][:, :, ::-1]
     ts = pages_ts[ptc][:, :, ::-1]
-    val = pages_valid[ptc][:, :, ::-1]
+    val = dev["pages_valid"][ptc][:, :, ::-1]
 
-    in_win = (val & p_hit[:, :, None]
+    in_win = (val & pvalid[:, :, None]
               & (ts >= t_start[:, None, None])
               & (ts < t_end[:, None, None]))              # (N, S, C)
 
@@ -163,15 +176,26 @@ def _sample_hop_jnp(page_table, page_size, page_tmin, page_tmax,
     eid_f = eid.reshape(N, W)
     ts_f = ts.reshape(N, W)
     m_f = in_win.reshape(N, W)                            # newest-first
+    if W < k:   # degenerate tiny snapshot: pad the candidate window
+        pad = ((0, 0), (0, k - W))
+        nbr_f = jnp.pad(nbr_f, pad, constant_values=NULL)
+        eid_f = jnp.pad(eid_f, pad, constant_values=NULL)
+        ts_f = jnp.pad(ts_f, pad, constant_values=0.0)
+        m_f = jnp.pad(m_f, pad, constant_values=False)
+        W = k
 
     if policy == "recent":
-        # stable-sort valids to the front, preserving newest-first order
-        order = jnp.argsort(~m_f, axis=-1, stable=True)[:, :k]
+        # composite (validity, recency) score: valid lanes score by
+        # newest-first position, invalid strictly below all valid ones;
+        # masked top-k is O(W log k) vs the old argsort's O(W log W).
+        # float32 scores: XLA's CPU/TPU top-k fast path is float-only,
+        # and W < 2^24 keeps the positions exactly representable
+        idx = jnp.arange(W, dtype=jnp.float32)
+        score = jnp.where(m_f, -idx[None, :], -jnp.inf)
+        order = jax.lax.top_k(score, k)[1]
     else:
         # uniform among candidates: Gumbel top-k == sampling w/o replacement
-        gumbel = -jnp.log(-jnp.log(
-            jax.random.uniform(rng_key, (N, W), minval=1e-9, maxval=1.0)))
-        score = jnp.where(m_f, gumbel, -jnp.inf)
+        score = jnp.where(m_f, gumbel_noise(rng_key, (N, W)), -jnp.inf)
         order = jax.lax.top_k(score, k)[1]
 
     take = jnp.take_along_axis
@@ -182,8 +206,73 @@ def _sample_hop_jnp(page_table, page_size, page_tmin, page_tmax,
     return out_nbr, out_eid, out_ts, out_m
 
 
+def _hop(dev, targets, t_end, t_start, tmask, rng_key, *, k: int,
+         policy: str, scan_pages: int, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.temporal_sample.ops import temporal_sample_pallas
+        return temporal_sample_pallas(
+            dev["page_table"][:, :scan_pages], dev["page_tmin"],
+            dev["page_tmax"], dev["pages_nbr"], dev["pages_eid"],
+            dev["pages_ts"], dev["pages_valid"], targets, t_end,
+            t_start, tmask, k=k, policy=policy, rng_key=rng_key)
+    return _hop_jnp(dev, targets, t_end, t_start, tmask, rng_key,
+                    k=k, policy=policy, scan_pages=scan_pages)
+
+
+def _khop_impl(dev, seeds, seed_ts, tmask0, rng_key, *,
+               fanouts: Tuple[int, ...], policy: str, window: float,
+               scan_pages: int, use_pallas: bool):
+    """The whole k-hop loop as ONE jitted dispatch: intermediate targets/
+    times/masks stay on device; per-hop fanouts are static so each hop
+    unrolls into the same trace. Returns a tuple of per-hop layer tuples
+    (dst_nodes, dst_times, dst_mask, nbr, eid, ts, mask)."""
+    TRACE_COUNTS["khop"] += 1        # trace-time side effect (probe)
+    targets, times, tmask = seeds, seed_ts, tmask0
+    needs_rng = policy in ("uniform", "window")
+    pol = "uniform" if policy == "window" else policy
+    layers = []
+    for h, k in enumerate(fanouts):
+        sub = jax.random.fold_in(rng_key, h) if needs_rng else rng_key
+        t_end = times
+        if policy == "window" and window > 0:
+            t_start = times - window
+        else:
+            t_start = jnp.full_like(times, -jnp.inf)
+        nbr, eid, ts, m = _hop(dev, targets, t_end, t_start, tmask, sub,
+                               k=k, policy=pol, scan_pages=scan_pages,
+                               use_pallas=use_pallas)
+        layers.append((targets, times, tmask, nbr, eid, ts, m))
+        targets, times, tmask = (nbr.reshape(-1), ts.reshape(-1),
+                                 m.reshape(-1))
+    return tuple(layers)
+
+
+_sample_khop = jax.jit(
+    _khop_impl,
+    static_argnames=("fanouts", "policy", "window", "scan_pages",
+                     "use_pallas"))
+
+
+# donated in-place scatters: the device mirror's old buffer is reused,
+# so a steady-state refresh transfers only the updated rows/cells
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(buf, rows, upd):
+    return buf.at[rows].set(upd)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_cells(buf, rows, lanes, upd):
+    return buf.at[rows, lanes].set(upd)
+
+
 class TemporalSampler:
-    """Paper's sampler: recent / uniform / window policies, k-hop."""
+    """Paper's sampler: recent / uniform / window policies, k-hop.
+
+    Device-resident incremental pipeline: the paged snapshot lives in
+    persistent device buffers; ``refresh()`` applies the snapshot's
+    ``SnapshotDelta`` as in-place row/cell scatters (donated buffers)
+    instead of re-uploading, and ``sample()`` runs the whole k-hop loop
+    as a single jitted dispatch."""
 
     def __init__(self, g_or_snap, fanouts: Sequence[int],
                  policy: str = "recent", window: float = 0.0,
@@ -200,67 +289,152 @@ class TemporalSampler:
         self.scan_pages = int(scan_pages)
         self.use_pallas = use_pallas
         self._key = jax.random.PRNGKey(seed)
-        self._dev = None  # lazily device-put snapshot arrays
+        self._dev = None          # persistent device mirror of the snapshot
+        self._dev_version = -1    # snapshot version the mirror reflects
+        self._dev_snap = None     # snapshot object the mirror was built
+        #                           from — deltas chain via in-place
+        #                           mutation, so versions from a DIFFERENT
+        #                           object (e.g. a fresh build_snapshot)
+        #                           are unrelated and force a full upload
+        self.last_refresh_bytes = 0   # H2D payload of the last sync
+        self.total_refresh_bytes = 0
 
     def refresh(self, snap: GraphSnapshot) -> None:
+        """Adopt a refreshed snapshot and sync the device mirror (delta
+        scatter when the snapshot's delta chains from our version; full
+        upload otherwise)."""
         self.snap = snap
-        self._dev = None
+        self._sync_device()
 
-    def _device_arrays(self):
-        if self._dev is None:
-            s = self.snap
-            self._dev = dict(
-                page_table=jnp.asarray(s.page_table),
-                page_size=jnp.asarray(s.page_size),
+    # -- device mirror maintenance ------------------------------------
+    def _table_cols(self) -> int:
+        """The sampler never reads past its scan_pages-newest pages, so
+        the device mirror only holds that prefix of the page table —
+        hub nodes with thousand-page chains would otherwise blow the
+        table up to (N, max_pages)."""
+        return min(self.scan_pages, self.snap.page_table.shape[1])
+
+    def _upload_full(self) -> None:
+        s = self.snap
+        table = np.ascontiguousarray(s.page_table[:, :self._table_cols()])
+        self._dev = dict(
+            page_table=jnp.asarray(table),
+            pages_nbr=jnp.asarray(s.nbr),
+            pages_eid=jnp.asarray(s.eid),
+            pages_ts=jnp.asarray(s.ts),
+            pages_valid=jnp.asarray(s.valid),
+        )
+        self.last_refresh_bytes += (
+            table.nbytes + s.nbr.nbytes + s.eid.nbytes + s.ts.nbytes
+            + s.valid.nbytes)
+        if self.use_pallas:
+            # the Pallas kernel additionally consumes the t_min/t_max
+            # descriptors its page-skip logic reads
+            self._dev.update(
                 page_tmin=jnp.asarray(s.page_tmin),
                 page_tmax=jnp.asarray(s.page_tmax),
-                pages_nbr=jnp.asarray(s.nbr),
-                pages_eid=jnp.asarray(s.eid),
-                pages_ts=jnp.asarray(s.ts),
-                pages_valid=jnp.asarray(s.valid),
             )
+            self.last_refresh_bytes += (s.page_tmin.nbytes
+                                        + s.page_tmax.nbytes)
+
+    def _scatter(self, name: str, host: np.ndarray, rows: np.ndarray,
+                 lanes: Optional[np.ndarray] = None) -> None:
+        """Mirror the changed entries of ``host`` into the device
+        buffer: whole rows, or (row, lane) cells when ``lanes`` is given
+        (the append-only page arrays — only the lanes filled since the
+        last refresh move over the wire). Reallocated host arrays
+        (geometric growth) and deltas covering most of the buffer fall
+        back to a full re-upload of that array. The index count is
+        padded to a power of two (repeating the first index, which is
+        idempotent) so the number of distinct traces stays O(log P)."""
+        dev = self._dev[name]
+        n = len(rows)
+        denom = host.shape[0] if lanes is None else host.size
+        if dev.shape == host.shape and n == 0:
+            return
+        if dev.shape != host.shape or n * 2 >= denom:
+            self._dev[name] = jnp.asarray(host)
+            self.last_refresh_bytes += host.nbytes
+            return
+        bucket = 1 << (n - 1).bit_length()
+        pad = bucket - n
+        rows_p = np.concatenate([rows, np.full(pad, rows[0], rows.dtype)])
+        if lanes is None:
+            upd = host[rows_p]
+            self._dev[name] = _scatter_rows(
+                dev, jnp.asarray(rows_p, jnp.int32), jnp.asarray(upd))
+            self.last_refresh_bytes += upd.nbytes + rows_p.size * 4
+        else:
+            lanes_p = np.concatenate(
+                [lanes, np.full(pad, lanes[0], lanes.dtype)])
+            upd = host[rows_p, lanes_p]
+            self._dev[name] = _scatter_cells(
+                dev, jnp.asarray(rows_p, jnp.int32),
+                jnp.asarray(lanes_p, jnp.int32), jnp.asarray(upd))
+            self.last_refresh_bytes += upd.nbytes + rows_p.size * 8
+
+    def _sync_device(self):
+        s = self.snap
+        if (self._dev is not None and self._dev_snap is s
+                and self._dev_version == s.version):
+            self.last_refresh_bytes = 0   # in sync: nothing transferred
+            return self._dev
+        self.last_refresh_bytes = 0
+        d = s.delta
+        if (self._dev is None or d is None or d.full
+                or self._dev_snap is not s
+                or d.base_version != self._dev_version):
+            self._upload_full()
+        else:
+            self._scatter("page_table",
+                          s.page_table[:, :self._table_cols()],
+                          d.table_rows)
+            self._scatter("pages_nbr", s.nbr, d.cell_rows, d.cell_lanes)
+            self._scatter("pages_eid", s.eid, d.cell_rows, d.cell_lanes)
+            self._scatter("pages_ts", s.ts, d.cell_rows, d.cell_lanes)
+            self._scatter("pages_valid", s.valid,
+                          d.cell_rows, d.cell_lanes)
+            # deletions/offloads flip validity outside the appended
+            # cells: those pages re-upload their (small) validity rows
+            self._scatter("pages_valid", s.valid, d.valid_rows)
+            if self.use_pallas:
+                self._scatter("page_tmin", s.page_tmin, d.page_rows)
+                self._scatter("page_tmax", s.page_tmax, d.page_rows)
+        self._dev_version = s.version
+        self._dev_snap = s
+        self.total_refresh_bytes += self.last_refresh_bytes
         return self._dev
+
+    # -- sampling ------------------------------------------------------
+    def _dispatch(self, targets, times, tmask,
+                  fanouts: Optional[Tuple[int, ...]] = None):
+        dev = self._sync_device()
+        scan = min(self.scan_pages, self.snap.page_table.shape[1])
+        if self.policy in ("uniform", "window"):
+            self._key, sub = jax.random.split(self._key)
+        else:
+            # deterministic policy: skip the per-call host-side split
+            sub = _zero_key()
+        return _sample_khop(
+            dev, targets, times, tmask, sub,
+            fanouts=self.fanouts if fanouts is None else fanouts,
+            policy=self.policy, window=self.window, scan_pages=scan,
+            use_pallas=self.use_pallas)
 
     def sample_hop(self, targets, times, tmask, k: int):
         """One hop for (padded) targets; returns (nbr, eid, ts, mask)."""
-        dev = self._device_arrays()
         targets = jnp.asarray(targets, jnp.int32)
         times = jnp.asarray(times, jnp.float32)
         tmask = jnp.asarray(tmask, bool)
-        scan = min(self.scan_pages, self.snap.page_table.shape[1])
-        self._key, sub = jax.random.split(self._key)
-        t_end = times
-        if self.policy == "window" and self.window > 0:
-            t_start = times - self.window
-        else:
-            t_start = jnp.full_like(times, -jnp.inf)
-        if self.use_pallas and self.policy == "recent":
-            from repro.kernels.temporal_sample.ops import (
-                temporal_sample_pallas)
-            return temporal_sample_pallas(
-                dev["page_table"][:, :scan], dev["page_tmin"],
-                dev["page_tmax"], dev["pages_nbr"], dev["pages_eid"],
-                dev["pages_ts"], dev["pages_valid"], targets, t_end,
-                t_start, tmask, k=k)
-        pol = "uniform" if self.policy == "window" else self.policy
-        return _sample_hop_jnp(
-            dev["page_table"], dev["page_size"], dev["page_tmin"],
-            dev["page_tmax"], dev["pages_nbr"], dev["pages_eid"],
-            dev["pages_ts"], dev["pages_valid"], targets, t_end,
-            t_start, tmask, sub, k=k, policy=pol, scan_pages=scan)
+        [(_, _, _, nbr, eid, ts, m)] = self._dispatch(
+            targets, times, tmask, fanouts=(int(k),))
+        return nbr, eid, ts, m
 
     def sample(self, seeds, seed_ts) -> List[SampledLayer]:
-        """k-hop sampling; returns one SampledLayer per fanout entry."""
+        """k-hop sampling in ONE jitted dispatch; returns one
+        SampledLayer per fanout entry."""
         targets = jnp.asarray(seeds, jnp.int32)
         times = jnp.asarray(seed_ts, jnp.float32)
         tmask = jnp.ones(targets.shape, bool)
-        layers: List[SampledLayer] = []
-        for k in self.fanouts:
-            nbr, eid, ts, m = self.sample_hop(targets, times, tmask, k)
-            layers.append(SampledLayer(
-                dst_nodes=targets, dst_times=times, dst_mask=tmask,
-                nbr_ids=nbr, nbr_eids=eid, nbr_ts=ts, mask=m))
-            targets = nbr.reshape(-1)
-            times = ts.reshape(-1)
-            tmask = m.reshape(-1)
-        return layers
+        return [SampledLayer(*h)
+                for h in self._dispatch(targets, times, tmask)]

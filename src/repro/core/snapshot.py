@@ -11,6 +11,12 @@ The snapshot is incremental: pages are immutable once full, so a snapshot
 refresh only appends/overwrites descriptor rows and the arena suffix that
 changed since the last refresh (mirroring the paper's "update without
 rebuild" property; see bench_graph_update.py).
+
+Each refresh additionally records a ``SnapshotDelta`` — the exact set of
+page rows / page-table rows that changed plus a monotonically increasing
+version — so device-side consumers (``TemporalSampler``) can mirror the
+refresh with in-place scatter updates instead of re-uploading the whole
+snapshot (the delta-upload protocol; README "Sampling pipeline").
 """
 from __future__ import annotations
 
@@ -20,6 +26,35 @@ from typing import Optional
 import numpy as np
 
 from repro.core.dgraph import NULL, DynamicGraph
+
+_EMPTY = np.empty(0, np.int64)
+
+
+@dataclasses.dataclass
+class SnapshotDelta:
+    """What changed between snapshot ``base_version`` and ``version``.
+
+    Row indices are into the snapshot's *capacity* arrays (valid whether
+    or not the arrays were reallocated; consumers compare shapes to
+    detect reallocation and fall back to a full upload per array).
+    ``full`` marks refreshes where the whole snapshot was rebuilt (e.g.
+    the tau-change fallback) and the row lists are meaningless.
+    """
+    base_version: int
+    version: int
+    full: bool = False
+    page_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: _EMPTY)   # pages whose fill/desc changed
+    table_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: _EMPTY)   # nodes whose page chain changed
+    valid_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: _EMPTY)   # pages whose validity changed
+    # appended arena cells: pages are append-only, so the minimal edge-
+    # data delta is the (page, lane) pairs filled since the last refresh
+    cell_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: _EMPTY)
+    cell_lanes: np.ndarray = dataclasses.field(
+        default_factory=lambda: _EMPTY)
 
 
 @dataclasses.dataclass
@@ -37,16 +72,20 @@ class GraphSnapshot:
     page_cap: int                 # uniform padded page width for kernels
     # arena (padded per page to page_cap for the kernel path); arrays may
     # hold spare capacity rows beyond n_pages (never referenced by the
-    # page table, so harmless to samplers)
+    # page table, so harmless to samplers); the node dimension grows
+    # geometrically too, so node rows in [n_live, capacity) are empty
     nbr: np.ndarray               # (P, page_cap) int32
     eid: np.ndarray               # (P, page_cap) int32
     ts: np.ndarray                # (P, page_cap) float32  (+inf padding)
     valid: np.ndarray             # (P, page_cap) bool
     n_pages: int = 0
+    n_live: int = 0               # live node rows (<= page_table.shape[0])
+    version: int = 0              # bumped by every refresh_snapshot
+    delta: Optional[SnapshotDelta] = None   # of the most recent refresh
 
     @property
     def num_nodes(self) -> int:
-        return len(self.node_npages)
+        return self.n_live
 
     @property
     def num_pages(self) -> int:
@@ -130,22 +169,8 @@ def build_snapshot(g: DynamicGraph, *, page_cap: Optional[int] = None
         page_tmax=tmax,
         page_start=starts.astype(np.int32),
         page_cap=int(page_cap),
-        nbr=nbr, eid=eid, ts=ts, valid=valid, n_pages=nb,
+        nbr=nbr, eid=eid, ts=ts, valid=valid, n_pages=nb, n_live=n,
     )
-
-
-def _gather_pages(g: DynamicGraph, page_ids: np.ndarray, page_cap: int):
-    """Padded (nbr, eid, ts, valid, size) rows for the given blocks."""
-    lane = np.arange(page_cap)
-    starts = g.blk_start[page_ids][:, None] + lane[None, :]
-    sizes = np.minimum(g.blk_size[page_ids], page_cap).astype(np.int32)
-    fill = (lane[None, :] < sizes[:, None]) \
-        & ~g.blk_offloaded[page_ids, None]
-    idx_c = np.clip(starts, 0, max(g.arena_used - 1, 0))
-    return (np.where(fill, g.nbr[idx_c], NULL).astype(np.int32),
-            np.where(fill, g.eid[idx_c], NULL).astype(np.int32),
-            np.where(fill, g.ts[idx_c], np.inf).astype(np.float32),
-            fill & g.valid[idx_c], sizes)
 
 
 def _rebuild_page_table(g: DynamicGraph, n: int, nb: int):
@@ -169,68 +194,85 @@ def refresh_snapshot(g: DynamicGraph, snap: GraphSnapshot
     """Incremental refresh: gather only NEW pages and re-copy pages whose
     fill changed; the (small) page table / descriptor arrays are rebuilt
     vectorized. Edge data of untouched pages is never re-read — the
-    paper's 'update without rebuild' property."""
+    paper's 'update without rebuild' property.
+
+    Sets ``snap.delta`` to the SnapshotDelta of this refresh and bumps
+    ``snap.version`` so device mirrors can apply the same delta."""
     n, nb = g.n_nodes, g.n_blocks
+    base_version = snap.version
     if nb and int(g.blk_cap[:nb].max()) > snap.page_cap:
-        return build_snapshot(g, page_cap=None)   # rare: tau changed
+        new = build_snapshot(g, page_cap=None)   # rare: tau changed
+        new.version = base_version + 1
+        new.delta = SnapshotDelta(base_version, new.version, full=True)
+        return new
 
     old_nb = snap.num_pages
     # changed old pages (tail blocks that gained edges)
     changed = np.nonzero(g.blk_size[:old_nb].astype(np.int32)
                          != snap.page_size[:old_nb])[0]
-    if len(changed):
-        nbr, eid, ts, valid, sizes = _gather_pages(g, changed,
-                                                   snap.page_cap)
-        snap.nbr[changed] = nbr
-        snap.eid[changed] = eid
-        snap.ts[changed] = ts
-        snap.valid[changed] = valid
-        snap.page_size[changed] = sizes
-        snap.page_tmin[changed] = g.blk_tmin[changed]
-        snap.page_tmax[changed] = g.blk_tmax[changed]
-    # brand-new pages: gather once, append into slack capacity
-    if nb > old_nb:
+    # grow page-row capacity before any write (pad = empty-page values,
+    # so untouched lanes of future pages are already correct)
+    if nb > len(snap.page_size):
         cap_rows = len(snap.page_size)
-        if nb > cap_rows:
-            grow = max(int(cap_rows * 1.5), nb) - cap_rows
-            pad2 = lambda a, fill: np.concatenate(
-                [a, np.full((grow,) + a.shape[1:], fill, a.dtype)])
-            snap.nbr = pad2(snap.nbr, NULL)
-            snap.eid = pad2(snap.eid, NULL)
-            snap.ts = pad2(snap.ts, np.inf)
-            snap.valid = pad2(snap.valid, False)
-            snap.page_size = pad2(snap.page_size, 0)
-            snap.page_tmin = pad2(snap.page_tmin, np.inf)
-            snap.page_tmax = pad2(snap.page_tmax, -np.inf)
-            snap.page_start = pad2(snap.page_start, 0)
-        new_ids = np.arange(old_nb, nb)
-        nbr, eid, ts, valid, sizes = _gather_pages(g, new_ids,
-                                                   snap.page_cap)
-        snap.nbr[old_nb:nb] = nbr
-        snap.eid[old_nb:nb] = eid
-        snap.ts[old_nb:nb] = ts
-        snap.valid[old_nb:nb] = valid
-        snap.page_size[old_nb:nb] = sizes
-        snap.page_tmin[old_nb:nb] = g.blk_tmin[new_ids]
-        snap.page_tmax[old_nb:nb] = g.blk_tmax[new_ids]
-        snap.page_start[old_nb:nb] = g.blk_start[new_ids]
+        grow = max(int(cap_rows * 1.5), nb) - cap_rows
+        pad2 = lambda a, fill: np.concatenate(
+            [a, np.full((grow,) + a.shape[1:], fill, a.dtype)])
+        snap.nbr = pad2(snap.nbr, NULL)
+        snap.eid = pad2(snap.eid, NULL)
+        snap.ts = pad2(snap.ts, np.inf)
+        snap.valid = pad2(snap.valid, False)
+        snap.page_size = pad2(snap.page_size, 0)
+        snap.page_tmin = pad2(snap.page_tmin, np.inf)
+        snap.page_tmax = pad2(snap.page_tmax, -np.inf)
+        snap.page_start = pad2(snap.page_start, 0)
+    page_rows = (np.concatenate([changed, np.arange(old_nb, nb)])
+                 if nb > old_nb else changed)
+    # pages are append-only: the minimal edge-data update is the lanes
+    # appended since the last refresh — (page, lane) cells, not rows
+    cell_rows = cell_lanes = _EMPTY
+    if len(page_rows):
+        lane_lo = np.where(page_rows < old_nb,
+                           snap.page_size[page_rows], 0).astype(np.int64)
+        lane_hi = np.minimum(g.blk_size[page_rows],
+                             snap.page_cap).astype(np.int64)
+        counts = np.maximum(lane_hi - lane_lo, 0)
+        cell_rows = np.repeat(page_rows, counts)
+        seg0 = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        cell_lanes = (np.arange(counts.sum())
+                      - np.repeat(seg0 - lane_lo, counts))
+        pos = g.blk_start[cell_rows] + cell_lanes
+        snap.nbr[cell_rows, cell_lanes] = g.nbr[pos]
+        snap.eid[cell_rows, cell_lanes] = g.eid[pos]
+        snap.ts[cell_rows, cell_lanes] = g.ts[pos]
+        snap.valid[cell_rows, cell_lanes] = g.valid[pos]
+        snap.page_size[page_rows] = lane_hi
+        snap.page_tmin[page_rows] = g.blk_tmin[page_rows]
+        snap.page_tmax[page_rows] = g.blk_tmax[page_rows]
+        if nb > old_nb:
+            new_ids = np.arange(old_nb, nb)
+            snap.page_start[new_ids] = g.blk_start[new_ids]
     snap.n_pages = nb
     # node-level tables: delta update (only nodes whose chains changed)
-    old_n = snap.num_nodes
+    old_n = snap.n_live
     width = snap.page_table.shape[1]
     need_width = max(int(g.nblocks[:n].max()) if n else 1, 1)
     if need_width > width:
         snap.page_table = np.concatenate(
             [snap.page_table,
-             np.full((old_n, max(need_width, int(width * 1.5)) - width),
+             np.full((snap.page_table.shape[0],
+                      max(need_width, int(width * 1.5)) - width),
                      NULL, np.int32)], axis=1)
         width = snap.page_table.shape[1]
-    if n > old_n:
+    cap_n = snap.page_table.shape[0]
+    if n > cap_n:
+        grow_n = max(int(cap_n * 1.5), n) - cap_n
         snap.page_table = np.concatenate(
             [snap.page_table,
-             np.full((n - old_n, width), NULL, np.int32)])
+             np.full((grow_n, width), NULL, np.int32)])
         snap.node_npages = np.concatenate(
-            [snap.node_npages, np.zeros(n - old_n, np.int32)])
+            [snap.node_npages, np.zeros(grow_n, np.int32)])
+        snap.node_degree = np.concatenate(
+            [snap.node_degree, np.zeros(grow_n, np.int32)])
     dirty = np.nonzero(g.nblocks[:old_n].astype(np.int32)
                        != snap.node_npages[:old_n])[0]
     if n > old_n:
@@ -250,11 +292,13 @@ def refresh_snapshot(g: DynamicGraph, snap: GraphSnapshot
         snap.page_table[dirty] = NULL
         snap.page_table[sorted_nodes, col] = blk_sel[order].astype(
             np.int32)
-        snap.node_npages = g.nblocks[:n].astype(np.int32)
-    snap.node_degree = g.degree[:n].astype(np.int32)
+        snap.node_npages[:n] = g.nblocks[:n].astype(np.int32)
+    snap.node_degree[:n] = g.degree[:n].astype(np.int32)
+    snap.n_live = n
     # deletions flip validity without resizing: recopy validity lanes for
     # all live pages — only when a deletion actually happened since the
     # last snapshot (a full-arena pass would otherwise dominate refresh)
+    valid_rows = _EMPTY
     if getattr(g, "_deleted_since_snapshot", False):
         lane = np.arange(snap.page_cap)
         starts = g.blk_start[:nb][:, None] + lane[None, :]
@@ -262,6 +306,14 @@ def refresh_snapshot(g: DynamicGraph, snap: GraphSnapshot
                                            snap.page_cap)[:, None]) \
             & ~g.blk_offloaded[:nb, None]
         idx_c = np.clip(starts, 0, max(g.arena_used - 1, 0))
-        snap.valid[:nb] = fill & g.valid[idx_c]
+        new_valid = fill & g.valid[idx_c]
+        valid_rows = np.nonzero(
+            (new_valid != snap.valid[:nb]).any(axis=1))[0]
+        snap.valid[:nb] = new_valid
         g._deleted_since_snapshot = False
+    snap.version = base_version + 1
+    snap.delta = SnapshotDelta(
+        base_version, snap.version, full=False, page_rows=page_rows,
+        table_rows=dirty, valid_rows=valid_rows,
+        cell_rows=cell_rows, cell_lanes=cell_lanes)
     return snap

@@ -1,5 +1,5 @@
 """jit'd wrapper for the temporal_sample Pallas kernel with the same
-signature as the vectorized-jnp sampler hop."""
+signature as the vectorized-jnp sampler hop (recent + uniform policies)."""
 from __future__ import annotations
 
 import functools
@@ -7,18 +7,21 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.rand import gumbel_noise
 from repro.kernels.temporal_sample.temporal_sample import (
     NULL, temporal_sample_kernel)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "policy", "interpret"))
 def temporal_sample_pallas(page_table_rows, page_tmin, page_tmax,
                            pages_nbr, pages_eid, pages_ts, pages_valid,
                            targets, t_end, t_start, tmask, *, k: int,
+                           policy: str = "recent", rng_key=None,
                            interpret: bool = True):
     """Gathers each target's page-table row then invokes the kernel.
 
-    page_table_rows: (N_nodes, S) — full table; targets: (N,).
+    page_table_rows: (N_nodes, S) — full table; targets: (N,). For
+    policy="uniform", ``rng_key`` drives the per-candidate Gumbel noise.
     Returns (nbr, eid, ts, mask) each (N, k), matching the jnp path.
     """
     in_range = (targets >= 0) & (targets < page_table_rows.shape[0])
@@ -26,12 +29,17 @@ def temporal_sample_pallas(page_table_rows, page_tmin, page_tmax,
     pt = jnp.where((tmask & in_range)[:, None],
                    page_table_rows[safe_t], NULL).astype(jnp.int32)
     tq = jnp.stack([t_start, t_end], axis=1).astype(jnp.float32)
+    noise = None
+    if policy == "uniform":
+        assert rng_key is not None, "uniform policy needs an rng key"
+        N, S = pt.shape
+        C = pages_ts.shape[1]
+        noise = gumbel_noise(rng_key, (N, S, C))
     nbr, eid, ts, cnt = temporal_sample_kernel(
         pt, page_tmin.astype(jnp.float32), page_tmax.astype(jnp.float32),
         pages_nbr.astype(jnp.int32), pages_eid.astype(jnp.int32),
         pages_ts.astype(jnp.float32), pages_valid, tq,
-        tmask, k=k, interpret=interpret)
-    mask = jnp.arange(k)[None, :] < cnt[:, :1]
+        tmask, k=k, policy=policy, noise=noise, interpret=interpret)
     # counters are broadcast along k; slot-validity = slot index < count
     mask = jnp.arange(k)[None, :] < cnt[:, 0:1]
     return (jnp.where(mask, nbr, NULL), jnp.where(mask, eid, NULL),

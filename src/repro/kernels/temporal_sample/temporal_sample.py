@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: paged temporal neighbor sampling, recent policy.
+"""Pallas TPU kernel: paged temporal neighbor sampling (recent + uniform).
 
 GNNFlow Algorithm 1, re-derived for the TPU (DESIGN.md §2):
   * the paper's warp-per-target traversal becomes one grid *program* per
@@ -17,6 +17,16 @@ GNNFlow Algorithm 1, re-derived for the TPU (DESIGN.md §2):
 
 Layout: pages_* are (P, C) with C = page_cap (lane-padded); lanes are
 oldest-first within a page, pages arrive newest-first via the page table.
+
+Policies:
+  * recent  — running fill of the newest-K in-window edges, with an
+    early-stop once the output tile is full (``_kernel_recent``);
+  * uniform — sampling without replacement via Gumbel top-k: i.i.d.
+    Gumbel noise (supplied as an input so the kernel is deterministic
+    and testable) scores every candidate, and the kernel keeps a
+    running K-entry top-k reservoir merged page by page
+    (``_kernel_uniform``). The merge is associative, so the result
+    equals a global Gumbel top-k over all in-window candidates.
 """
 from __future__ import annotations
 
@@ -29,7 +39,7 @@ from jax.experimental import pallas as pl
 NULL = -1
 
 
-def _kernel(page_ids_ref,            # scalar prefetch: (N, S) int32
+def _kernel_recent(page_ids_ref,     # scalar prefetch: (N, S) int32
             tmin_ref, tmax_ref,      # scalar prefetch: (P,) f32
             # inputs (blocked):
             nbr_ref, eid_ref, ts_ref, val_ref,   # (1, C) page row
@@ -90,11 +100,67 @@ def _kernel(page_ids_ref,            # scalar prefetch: (N, S) int32
             (1, k), jnp.int32)
 
 
+def _kernel_uniform(page_ids_ref,    # scalar prefetch: (N, S) int32
+                    tmin_ref, tmax_ref,      # scalar prefetch: (P,) f32
+                    # inputs (blocked):
+                    nbr_ref, eid_ref, ts_ref, val_ref,   # (1, C) page row
+                    noise_ref,               # (1, 1, C) Gumbel noise
+                    tq_ref,                  # (1, 2) [t_start, t_end]
+                    msk_ref,                 # (1, 1) target mask
+                    # outputs:
+                    out_nbr_ref, out_eid_ref, out_ts_ref, out_cnt_ref,
+                    out_score_ref,           # (1, K) running reservoir
+                    *, k: int, page_cap: int, scan_pages: int):
+    i = pl.program_id(0)             # target index
+    j = pl.program_id(1)             # page step (newest-first)
+
+    @pl.when(j == 0)
+    def _init():
+        out_nbr_ref[...] = jnp.full((1, k), NULL, jnp.int32)
+        out_eid_ref[...] = jnp.full((1, k), NULL, jnp.int32)
+        out_ts_ref[...] = jnp.zeros((1, k), jnp.float32)
+        out_cnt_ref[...] = jnp.zeros((1, k), jnp.int32)
+        out_score_ref[...] = jnp.full((1, k), -jnp.inf, jnp.float32)
+
+    count = out_cnt_ref[0, 0]
+    t_start = tq_ref[0, 0]
+    t_end = tq_ref[0, 1]
+    pid = page_ids_ref[i, j]
+    # no early-stop: unlike recent, every candidate must get a chance
+    alive = (pid != NULL) & (msk_ref[0, 0] != 0)
+    pid_c = jnp.maximum(pid, 0)
+    hit = alive & (tmin_ref[pid_c] < t_end) & (tmax_ref[pid_c] >= t_start)
+
+    @pl.when(hit)
+    def _merge_page():
+        ts_row = ts_ref[0, :]                      # (C,)
+        val_row = val_ref[0, :] != 0
+        in_win = val_row & (ts_row >= t_start) & (ts_row < t_end)
+        cand_score = jnp.where(in_win, noise_ref[0, 0, :], -jnp.inf)
+        # merge the page's candidates into the running top-k reservoir
+        comb_score = jnp.concatenate([out_score_ref[0, :], cand_score])
+        comb_nbr = jnp.concatenate([out_nbr_ref[0, :], nbr_ref[0, :]])
+        comb_eid = jnp.concatenate([out_eid_ref[0, :], eid_ref[0, :]])
+        comb_ts = jnp.concatenate([out_ts_ref[0, :], ts_row])
+        top_s, top_i = jax.lax.top_k(comb_score, k)
+        out_score_ref[0, :] = top_s
+        out_nbr_ref[0, :] = comb_nbr[top_i]
+        out_eid_ref[0, :] = comb_eid[top_i]
+        out_ts_ref[0, :] = comb_ts[top_i].astype(jnp.float32)
+        n_new = jnp.sum(in_win.astype(jnp.int32))
+        out_cnt_ref[...] = jnp.minimum(count + n_new,
+                                       k).astype(jnp.int32)[None, None
+                                                            ] * jnp.ones(
+            (1, k), jnp.int32)
+
+
 def temporal_sample_kernel(page_table, page_tmin, page_tmax, pages_nbr,
                            pages_eid, pages_ts, pages_valid, t_query,
-                           tmask, *, k: int, interpret: bool = True):
+                           tmask, *, k: int, policy: str = "recent",
+                           noise=None, interpret: bool = True):
     """page_table: (N, S) newest-first page ids; pages_*: (P, C);
-    t_query: (N, 2) [t_start, t_end]; tmask: (N,) int32.
+    t_query: (N, 2) [t_start, t_end]; tmask: (N,) int32; noise: (N, S, C)
+    Gumbel scores, required for policy="uniform".
     Returns (nbr, eid, ts, cnt) each (N, k) / cnt (N, k) fill counters."""
     N, S = page_table.shape
     P, C = pages_ts.shape
@@ -102,6 +168,9 @@ def temporal_sample_kernel(page_table, page_tmin, page_tmax, pages_nbr,
 
     def page_map(i, j, page_ids, tmin, tmax):
         return (jnp.maximum(page_ids[i, j], 0), 0)
+
+    def noise_map(i, j, *_):
+        return (i, j, 0)
 
     def tq_map(i, j, *_):
         return (i, 0)
@@ -111,8 +180,6 @@ def temporal_sample_kernel(page_table, page_tmin, page_tmax, pages_nbr,
         pl.BlockSpec((1, C), page_map),   # eid
         pl.BlockSpec((1, C), page_map),   # ts
         pl.BlockSpec((1, C), page_map),   # valid
-        pl.BlockSpec((1, 2), tq_map),     # t_query
-        pl.BlockSpec((1, 1), tq_map),     # tmask
     ]
     out_specs = [
         pl.BlockSpec((1, k), tq_map),
@@ -126,19 +193,32 @@ def temporal_sample_kernel(page_table, page_tmin, page_tmax, pages_nbr,
         jax.ShapeDtypeStruct((N, k), jnp.float32),
         jax.ShapeDtypeStruct((N, k), jnp.int32),
     ]
-    grid_spec = pl.GridSpec(grid=grid, in_specs=in_specs,
-                            out_specs=out_specs)
-    kern = functools.partial(_kernel, k=k, page_cap=C, scan_pages=S)
+    inputs = [pages_nbr, pages_eid, pages_ts,
+              pages_valid.astype(jnp.int32)]
+    if policy == "uniform":
+        assert noise is not None, "uniform policy needs Gumbel noise"
+        in_specs.append(pl.BlockSpec((1, 1, C), noise_map))
+        inputs.append(noise.astype(jnp.float32))
+        out_specs.append(pl.BlockSpec((1, k), tq_map))
+        out_shape.append(jax.ShapeDtypeStruct((N, k), jnp.float32))
+        body = _kernel_uniform
+    else:
+        assert policy == "recent", policy
+        body = _kernel_recent
+    in_specs += [
+        pl.BlockSpec((1, 2), tq_map),     # t_query
+        pl.BlockSpec((1, 1), tq_map),     # tmask
+    ]
+    kern = functools.partial(body, k=k, page_cap=C, scan_pages=S)
     fn = pl.pallas_call(
         kern,
         grid_spec=pltpu_prefetch(grid, in_specs, out_specs, n_prefetch=3),
         out_shape=out_shape,
         interpret=interpret,
     )
-    return fn(page_table, page_tmin, page_tmax,
-              pages_nbr, pages_eid, pages_ts,
-              pages_valid.astype(jnp.int32), t_query,
-              tmask.astype(jnp.int32).reshape(N, 1))
+    out = fn(page_table, page_tmin, page_tmax, *inputs, t_query,
+             tmask.astype(jnp.int32).reshape(N, 1))
+    return out[:4]
 
 
 def pltpu_prefetch(grid, in_specs, out_specs, n_prefetch):

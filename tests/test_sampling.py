@@ -169,6 +169,137 @@ def test_pallas_kernel_matches_ref_and_oracle():
     np.testing.assert_array_equal(np.asarray(eid), np.asarray(lp.nbr_eids))
 
 
+def test_khop_is_single_fused_dispatch():
+    """The whole k-hop sample() is ONE jitted dispatch: the trace-count
+    probe must tick once for a 3-hop sampler, and steady-state calls
+    must not retrace."""
+    from repro.core import sampling as S
+
+    g, *_ = _graph(seed=11)
+    smp = TemporalSampler(g, fanouts=(4, 3, 2), policy="recent",
+                          scan_pages=8)
+    seeds = np.arange(16, dtype=np.int64)
+    ts = np.full(16, 900.0)
+    base = S.TRACE_COUNTS["khop"]
+    layers = smp.sample(seeds, ts)
+    assert len(layers) == 3
+    assert S.TRACE_COUNTS["khop"] == base + 1
+    smp.sample(seeds, ts)
+    smp.sample(seeds, ts)
+    assert S.TRACE_COUNTS["khop"] == base + 1
+
+
+def test_rng_only_consumed_by_stochastic_policies():
+    """recent is deterministic: no per-call host-side key split."""
+    g, *_ = _graph(seed=12)
+    seeds = np.arange(10, dtype=np.int64)
+    ts = np.full(10, 700.0)
+    smp = TemporalSampler(g, fanouts=(4,), policy="recent", scan_pages=8)
+    k0 = np.asarray(smp._key).copy()
+    smp.sample(seeds, ts)
+    np.testing.assert_array_equal(np.asarray(smp._key), k0)
+    smp_u = TemporalSampler(g, fanouts=(4,), policy="uniform",
+                            scan_pages=8)
+    k0 = np.asarray(smp_u._key).copy()
+    smp_u.sample(seeds, ts)
+    assert not np.array_equal(np.asarray(smp_u._key), k0)
+
+
+@pytest.mark.parametrize("policy,use_pallas", [
+    ("recent", False), ("recent", True),
+    ("uniform", False), ("uniform", True),
+    ("window", False), ("window", True),
+])
+def test_fused_sampler_agrees_with_oracle(policy, use_pallas):
+    """All three policies, jnp and Pallas (interpret) paths, against the
+    numpy oracle: recent matches exactly; stochastic policies must pick
+    only oracle candidates and the full min(k, n_candidates) of them."""
+    g, *_ = _graph(n_events=400, n_nodes=30, tau=8, seed=6)
+    window = 80.0 if policy == "window" else 0.0
+    seeds = np.arange(g.n_nodes, dtype=np.int64)
+    seed_ts = np.full(len(seeds), 800.0)
+    k = 5
+    smp = TemporalSampler(g, fanouts=(k,), policy=policy, window=window,
+                          scan_pages=64, use_pallas=use_pallas)
+    [layer] = smp.sample(seeds, seed_ts)
+    if policy == "recent":
+        [orc] = oracle_sample(g, seeds, seed_ts, (k,), policy="recent")
+        assert _sorted_rows(orc) == _sorted_rows(layer)
+        return
+    nbr = np.asarray(layer.nbr_ids)
+    eidm = np.asarray(layer.nbr_eids)
+    msk = np.asarray(layer.mask)
+    t_lo = 800.0 - window if policy == "window" else -np.inf
+    for i, v in enumerate(seeds):
+        cand_n, cand_e, _ = g.neighbors_in_window(int(v), t_lo, 800.0)
+        got = set(zip(eidm[i][msk[i]].tolist(), nbr[i][msk[i]].tolist()))
+        allowed = set(zip(cand_e.tolist(), cand_n.tolist()))
+        assert got <= allowed
+        assert msk[i].sum() == min(k, len(cand_n))
+
+
+def test_pallas_uniform_kernel_matches_gumbel_ref():
+    """Given identical Gumbel noise, the kernel's page-by-page reservoir
+    merge must equal a global Gumbel top-k (the jnp reference)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.temporal_sample.ref import (
+        temporal_sample_uniform_ref)
+    from repro.kernels.temporal_sample.temporal_sample import (
+        temporal_sample_kernel)
+
+    g, *_ = _graph(n_events=300, n_nodes=25, tau=8, seed=8)
+    snap = build_snapshot(g)
+    N = 25
+    S = snap.page_table.shape[1]
+    C = snap.ts.shape[1]
+    k = 6
+    from repro.core.rand import gumbel_noise
+
+    targets = jnp.arange(N, dtype=jnp.int32)
+    t_end = jnp.full(N, 700.0, jnp.float32)
+    t_start = jnp.full(N, -jnp.inf, jnp.float32)
+    tmask = jnp.ones(N, bool)
+    noise = gumbel_noise(jax.random.PRNGKey(3), (N, S, C))
+    pt = jnp.asarray(snap.page_table)
+    tq = jnp.stack([t_start, t_end], axis=1)
+    nbr, eid, ts_, cnt = temporal_sample_kernel(
+        pt, jnp.asarray(snap.page_tmin), jnp.asarray(snap.page_tmax),
+        jnp.asarray(snap.nbr), jnp.asarray(snap.eid),
+        jnp.asarray(snap.ts), jnp.asarray(snap.valid), tq,
+        tmask, k=k, policy="uniform", noise=noise)
+    r_nbr, r_eid, r_ts, r_m = temporal_sample_uniform_ref(
+        pt, jnp.asarray(snap.page_tmin), jnp.asarray(snap.page_tmax),
+        jnp.asarray(snap.nbr), jnp.asarray(snap.eid),
+        jnp.asarray(snap.ts), jnp.asarray(snap.valid), targets,
+        t_end, t_start, tmask, noise, k=k)
+    mask = np.arange(k)[None, :] < np.asarray(cnt)[:, 0:1]
+    np.testing.assert_array_equal(mask, np.asarray(r_m))
+    np.testing.assert_array_equal(np.asarray(eid)[mask],
+                                  np.asarray(r_eid)[mask])
+    np.testing.assert_array_equal(np.asarray(nbr)[mask],
+                                  np.asarray(r_nbr)[mask])
+    np.testing.assert_allclose(np.asarray(ts_)[mask],
+                               np.asarray(r_ts)[mask], rtol=1e-6)
+
+
+def test_pallas_uniform_is_actually_uniform():
+    """Distributional sanity for the kernel's Gumbel reservoir."""
+    g = DynamicGraph(threshold=8)
+    g.add_edges(np.zeros(20, np.int64), np.arange(20),
+                np.arange(20, dtype=float))
+    snap = build_snapshot(g)
+    counts = np.zeros(20)
+    for s in range(200):
+        smp = TemporalSampler(snap, fanouts=(5,), policy="uniform",
+                              seed=s, use_pallas=True, scan_pages=16)
+        [layer] = smp.sample(np.array([0]), np.array([100.0]))
+        for x in np.asarray(layer.nbr_ids)[0][np.asarray(layer.mask)[0]]:
+            counts[x] += 1
+    assert (counts > 0).all()
+    assert counts.max() / counts.mean() < 2.5
+
+
 @pytest.mark.parametrize("shape", [(3, 4, 2), (17, 8, 10), (30, 16, 5)])
 def test_pallas_kernel_shape_sweep(shape):
     """Kernel vs ref across (nodes, tau, k) shapes (deliverable c)."""
