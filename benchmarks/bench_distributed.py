@@ -1,0 +1,111 @@
+"""Paper Fig. 6 / §5 artifact: distributed continuous training.
+
+Runs the full P x G loop (DistributedContinuousTrainer) on a drifting
+power-law stream under each gradient-collective mode and reports, per
+round: the ingest/sample/fetch/train wall-time split, the gradient-
+reduction wire bytes, the static-schedule worker-load CV, the ingest
+dispatch + sampling RPC bytes, and the delta-refresh H2D bytes next to
+the full re-upload a rebuild would pay (the sublinearity claim).
+"""
+from __future__ import annotations
+
+import os
+
+# the trainer shards over a P*G="dp" mesh: force the fake 8-device host
+# platform BEFORE jax initializes its backends (mirrors tests/conftest)
+_DEV_FLAG = "--xla_force_host_platform_device_count=8"
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = f"{_flags} {_DEV_FLAG}".strip()
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs.tgn_gdelt import DistConfig, tgat
+from repro.data.events import synth_ctdg
+from repro.dist.continuous import DistributedContinuousTrainer
+
+MODES = {
+    "bucketed": dict(collective="bucketed"),
+    "quantized_int8": dict(collective="quantized", quant_bits=8),
+    "topk_1pct": dict(collective="topk", topk_frac=0.01),
+}
+
+
+def run() -> None:
+    smoke = os.environ.get("BENCH_QUICK", "") not in ("", "0")
+    n_rounds = 2 if smoke else 3
+    round_sz = 1_024 if smoke else 2_048
+    warm = 4_096
+    stream = synth_ctdg(n_nodes=4_000, n_events=warm + 3 * 2_048 + 1_000,
+                        t_span=100_000, d_node=16, d_edge=12, alpha=2.2,
+                        drift_every=30_000, seed=6)
+    cfg = tgat(sampling="recent", d_node=16, d_edge=12, d_time=10,
+               d_hidden=32, fanouts=(8, 4),
+               batch_size=256 if smoke else 512)
+
+    results: Dict = {}
+    for name, kw in MODES.items():
+        dist = DistConfig(n_machines=4, n_gpus=2, **kw)
+        tr = DistributedContinuousTrainer(cfg, stream, dist,
+                                          threshold=32, cache_ratio=0.1,
+                                          lr=1e-3, seed=0)
+        tr.ingest(stream.slice(0, warm))
+        rounds = []
+        for r in range(n_rounds):
+            lo = warm + r * round_sz
+            t0 = time.perf_counter()
+            m = tr.train_round(stream.slice(lo, lo + round_sz),
+                               epochs=2, replay_ratio=0.2)
+            # true round wall clock: train_s already contains the
+            # training loop's in-loop sampling/fetching, so summing the
+            # splits would double-count them
+            total = time.perf_counter() - t0
+            rounds.append({
+                "ap": m.ap, "loss": m.loss, "round_s": total,
+                "ingest_s": m.ingest_s, "sample_s": m.sample_s,
+                "fetch_s": m.fetch_s, "train_s": m.train_s,
+                "reduce_bytes": m.reduce_bytes,
+                "refresh_bytes": m.refresh_bytes,
+                "dispatch_bytes": m.dispatch_bytes,
+                "rpc_bytes": m.request_bytes + m.response_bytes,
+                "load_cv": m.load_cv,
+            })
+            emit(f"distributed/{name}/round{r}", total * 1e6,
+                 f"ap={m.ap:.3f};ingest={m.ingest_s:.2f}s;"
+                 f"sample={m.sample_s:.2f}s;train={m.train_s:.2f}s;"
+                 f"reduce_kB={m.reduce_bytes / 1e3:.0f};"
+                 f"cv={m.load_cv:.3f};"
+                 f"refresh_kB={m.refresh_bytes / 1e3:.0f}")
+        results[name] = {
+            "rounds": rounds,
+            "reduce_bytes_per_step": tr.reduce_bytes_per_step,
+            # what a per-round full re-upload of every rank mirror would
+            # cost at the CURRENT graph size (rebuild baseline): the
+            # delta path's refresh_bytes stay flat while this grows
+            "full_upload_bytes_now": tr.full_upload_bytes(),
+        }
+        emit(f"distributed/{name}/reduction", 0.0,
+             f"bytes_per_step={tr.reduce_bytes_per_step};"
+             f"exact_frac="
+             f"{tr.reduce_bytes_per_step / max(results['bucketed']['reduce_bytes_per_step'], 1):.3f}")
+
+    b = results["bucketed"]
+    ratio = (b["rounds"][-1]["refresh_bytes"]
+             / max(b["full_upload_bytes_now"], 1))
+    emit("distributed/refresh_sublinear", 0.0,
+         f"delta_vs_rebuild={ratio:.3f}")
+    results["paper_claim"] = (
+        "one continuous loop across P machines x G ranks: partitioned "
+        "ingest publishes SnapshotDeltas (refresh bytes flat while the "
+        "graph grows), the static schedule balances sampling load "
+        "(paper CV < 0.06), and compressed collectives cut reduction "
+        "bytes 4-100x vs exact f32 at a bounded accuracy cost")
+    save_json("distributed", results)
+
+
+if __name__ == "__main__":
+    run()

@@ -15,8 +15,9 @@ def main() -> None:
 
     from benchmarks import (bench_access_patterns, bench_block_sizing,
                             bench_cache, bench_continuous,
-                            bench_graph_update, bench_roofline,
-                            bench_sampling, bench_scaling)
+                            bench_distributed, bench_graph_update,
+                            bench_roofline, bench_sampling,
+                            bench_scaling)
     benches = {
         "graph_update": bench_graph_update.run,      # Tab.2 / Fig.8
         "block_sizing": bench_block_sizing.run,      # Tab.6 / Fig.12
@@ -24,6 +25,7 @@ def main() -> None:
         "cache": bench_cache.run,                    # Fig.14
         "access_patterns": bench_access_patterns.run,  # Fig.5 / Tab.4
         "continuous": bench_continuous.run,          # Fig.8/10/11
+        "distributed": bench_distributed.run,        # Fig.6 / §5
         "scaling": bench_scaling.run,                # Fig.15 / Tab.7
         "roofline": bench_roofline.run,              # deliverable (g)
     }

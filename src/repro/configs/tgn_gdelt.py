@@ -34,6 +34,27 @@ class GNNConfig:
         return len(self.fanouts)
 
 
+@dataclass(frozen=True)
+class DistConfig:
+    """Distributed continuous-training shape (repro.dist.continuous).
+
+    P simulated machines each hold a graph/feature shard and run G
+    trainer ranks; the P*G workers form the data-parallel group whose
+    gradients are reduced with the selected collective schedule."""
+    n_machines: int = 4            # P: graph/feature shards ("machines")
+    n_gpus: int = 2                # G: trainer ranks per machine
+    collective: str = "bucketed"   # bucketed | quantized | topk
+    quant_bits: int = 8            # quantized mode: 8 (int8) or 16 (fp16)
+    topk_frac: float = 0.01        # topk mode: fraction transmitted
+    grad_accum: int = 1            # micro-batches per optimizer step
+    bucket_bytes: int = 4 << 20    # bucketed mode: fusion bucket size
+    scan_pages: int = 16           # per-partition sampler page window
+
+    @property
+    def n_workers(self) -> int:
+        return self.n_machines * self.n_gpus
+
+
 def tgn(**kw) -> GNNConfig:
     base = dict(name="tgn", model="tgn", fanouts=(10,), sampling="recent",
                 use_memory=True, batch_size=4000)

@@ -40,6 +40,58 @@ from repro.train.optimizer import Optimizer, adamw
 NULL = -1
 
 
+class EventLog:
+    """Chronological (ts -> eid) record of ingested events.
+
+    Both trainers use it to recover the edge ids of a training batch
+    (TGN's raw messages need the batch's edge features); event streams
+    are time-sorted, so a binary search over the logged timestamps maps
+    each event back to the id it was assigned at ingest. Arrays grow
+    geometrically so appends stay amortized O(batch)."""
+
+    def __init__(self):
+        self.size = 0
+        self.ts = np.zeros(1024, np.float64)
+        self.eid = np.zeros(1024, np.int64)
+
+    def append(self, ts: np.ndarray, eids: np.ndarray) -> None:
+        # sort within the batch (ingest sorts in-batch too, and batches
+        # are chronological batch-to-batch), keeping searchsorted valid
+        ts = np.asarray(ts, np.float64)
+        order = np.argsort(ts, kind="stable")
+        n = self.size + len(ts)
+        if n > len(self.ts):
+            grow = max(int(len(self.ts) * 1.5), n)
+            for name in ("ts", "eid"):
+                arr = getattr(self, name)
+                g = np.zeros(grow, arr.dtype)
+                g[:self.size] = arr[:self.size]
+                setattr(self, name, g)
+        self.ts[self.size:n] = ts[order]
+        self.eid[self.size:n] = np.asarray(eids, np.int64)[order]
+        self.size = n
+
+    def eids_for(self, ts: np.ndarray) -> np.ndarray:
+        if not self.size:
+            return np.zeros(len(ts), np.int64)
+        ts = np.asarray(ts, np.float64)
+        log = self.ts[:self.size]
+        pos = np.searchsorted(log, ts, side="left")
+        if len(ts) > 1:
+            # tie disambiguation: consecutive queries with the SAME
+            # timestamp take consecutive log entries (the log keeps
+            # input order within a tie), instead of all mapping to the
+            # first tied event's eid
+            idx = np.arange(len(ts))
+            new_run = np.concatenate([[True], ts[1:] != ts[:-1]])
+            run_start = np.maximum.accumulate(np.where(new_run, idx, 0))
+            rank = idx - run_start
+            hi = np.searchsorted(log, ts, side="right")
+            pos = np.minimum(pos + rank, np.maximum(hi - 1, pos))
+        pos = np.clip(pos, 0, self.size - 1)
+        return self.eid[pos]
+
+
 # ---------------------------------------------------------------------------
 # TGN raw-message store (lazy memory updates, trained GRU)
 # ---------------------------------------------------------------------------
@@ -114,6 +166,150 @@ class TGNMemory:
 
 
 # ---------------------------------------------------------------------------
+# Shared step/batch builders (single-host + distributed trainers)
+# ---------------------------------------------------------------------------
+
+
+def make_forward(cfg: GNNConfig, use_pallas: bool = False):
+    """Loss/score forward over one assembled batch.
+
+    Shared by ContinuousTrainer and repro.dist.continuous — the
+    distributed trainer runs the SAME function per shard under a
+    shard_map, so equal shard sizes make the psum-averaged loss exactly
+    the single-host batch loss."""
+
+    def apply_memory(params, hops, mem_blobs):
+        """Apply pending raw messages in-graph (trains the GRU)."""
+        out = []
+        for hop, (dstb, nbrb) in zip(hops, mem_blobs):
+            def eff(blob):
+                new = G.memory_batch_update(
+                    params["memory"], None, blob["mem"],
+                    blob["last_upd"], blob["other_mem"],
+                    blob["e_feat"], blob["msg_t"])
+                return jnp.where(blob["has"][..., None], new,
+                                 blob["mem"])
+            dmem = eff(dstb)
+            nK = hop["nbr_feat"].shape[:2]
+            nmem = eff(nbrb).reshape(nK + (-1,))
+            hop = dict(hop)
+            hop["dst_feat"] = jnp.concatenate(
+                [hop["dst_feat"], dmem], axis=-1)
+            hop["nbr_feat"] = jnp.concatenate(
+                [hop["nbr_feat"], nmem], axis=-1)
+            out.append(hop)
+        return out
+
+    def forward(params, batch):
+        if cfg.model == "dysat":
+            h = G.dysat_embed(params["gnn"], cfg, batch["snapshots"])
+        else:
+            hops = batch["hops"]
+            if cfg.use_memory:
+                hops = apply_memory(params, hops, batch["mem_blobs"])
+            h = G.gnn_embed(params["gnn"], cfg, hops,
+                            use_pallas=use_pallas)
+        n = h.shape[0] // 3       # seeds = [src | dst | neg], static
+        h_src, h_dst, h_neg = h[:n], h[n:2 * n], h[2 * n:3 * n]
+        pos = G.link_score(params["head"], h_src, h_dst)
+        neg = G.link_score(params["head"], h_src, h_neg)
+        scores = jnp.concatenate([pos, neg])
+        labels = jnp.concatenate([jnp.ones_like(pos),
+                                  jnp.zeros_like(neg)])
+        loss = G.bce_logits(scores, labels)
+        return loss, (scores, labels)
+
+    return forward
+
+
+def eval_metrics(events: EventStream, batch_size: int, step_fn
+                 ) -> Dict[str, float]:
+    """Shared test-then-train evaluation loop: ``step_fn(src, dst, ts)``
+    returns (loss, scores, labels) for one chronological batch; the
+    aggregation (AP / mean loss / accuracy) is identical for the
+    single-host and distributed trainers."""
+    scores_all, labels_all, losses = [], [], []
+    for src, dst, ts, _ in chronological_batches(events, batch_size):
+        loss, scores, labels = step_fn(src, dst, ts)
+        scores_all.append(np.asarray(scores))
+        labels_all.append(np.asarray(labels))
+        losses.append(float(loss))
+    s = np.concatenate(scores_all)
+    l = np.concatenate(labels_all)
+    return {"ap": G.average_precision(s, l),
+            "loss": float(np.mean(losses)),
+            "acc": float(((s > 0) == l).mean())}
+
+
+class BatchBuilder:
+    """Event slice -> jit-ready batch, with sampling/fetch accounting.
+
+    Shared by both trainers: they consume the same negative-sampling RNG
+    stream and assemble identical tensors. The sampler is injected per
+    call (``sample_fn``), so the single-host trainer passes its fused
+    ``TemporalSampler.sample`` while the distributed trainer routes each
+    worker's shard through the static schedule — everything else
+    (caches, memory blobs, feature fetch) is the same code path."""
+
+    def __init__(self, cfg: GNNConfig, stream: EventStream, *,
+                 fetch_node, fetch_edge, edge_feat_fn=None,
+                 memory: Optional["TGNMemory"] = None,
+                 rng: Optional[np.random.Generator] = None):
+        self.cfg = cfg
+        self.stream = stream
+        self.fetch_node = fetch_node
+        self.fetch_edge = fetch_edge
+        self.edge_feat_fn = edge_feat_fn
+        self.memory = memory
+        self.rng = rng if rng is not None else np.random.default_rng(0)
+        self.timers = {"sample": 0.0, "fetch": 0.0, "train": 0.0,
+                       "ingest": 0.0}
+
+    def negatives(self, n: int) -> np.ndarray:
+        return sample_negatives(self.stream, n, self.rng)
+
+    def build(self, seeds: np.ndarray, seed_ts: np.ndarray,
+              sample_fn) -> Dict[str, Any]:
+        """Sample + fetch + assemble one batch of [src|dst|neg] seeds."""
+        cfg = self.cfg
+        seeds = np.asarray(seeds, np.int64)
+        seed_ts = np.asarray(seed_ts, np.float32)
+        if cfg.model == "dysat":
+            # one hop-set per time-window snapshot (newest last)
+            snapshots = []
+            for i in reversed(range(cfg.n_snapshots)):
+                t0 = time.perf_counter()
+                layers = sample_fn(seeds, seed_ts - i * cfg.window)
+                self.timers["sample"] += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                snapshots.append(assemble(layers, self.fetch_node,
+                                          self.fetch_edge))
+                self.timers["fetch"] += time.perf_counter() - t0
+            return {"snapshots": snapshots}
+
+        t0 = time.perf_counter()
+        layers = sample_fn(seeds, seed_ts)
+        self.timers["sample"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        hops = assemble(layers, self.fetch_node, self.fetch_edge)
+        batch: Dict[str, Any] = {"hops": hops}
+        if cfg.use_memory:
+            blobs = []
+            for layer in layers:
+                dstb = self.memory.gather(
+                    np.asarray(layer.dst_nodes, np.int64),
+                    self.edge_feat_fn)
+                nbrb = self.memory.gather(
+                    np.asarray(layer.nbr_ids, np.int64).reshape(-1),
+                    self.edge_feat_fn)
+                blobs.append((dstb, nbrb))
+            batch["mem_blobs"] = blobs
+        self.timers["fetch"] += time.perf_counter() - t0
+        return batch
+
+
+# ---------------------------------------------------------------------------
 # Continuous trainer
 # ---------------------------------------------------------------------------
 
@@ -165,70 +361,27 @@ class ContinuousTrainer:
             use_pallas=use_pallas, seed=seed)
         self._snap = None
 
-        key = jax.random.PRNGKey(seed)
-        k1, k2, k3 = jax.random.split(key, 3)
-        self.params: Dict[str, Any] = {
-            "gnn": G.init_gnn(cfg, k1),
-            "head": G.init_link_head(cfg, k2),
-        }
-        if cfg.use_memory:
-            self.params["memory"] = G.init_memory_module(cfg, k3)
-            self.memory = TGNMemory(cfg, self.store)
-        else:
-            self.memory = None
+        self.params: Dict[str, Any] = G.init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self.memory = TGNMemory(cfg, self.store) if cfg.use_memory \
+            else None
 
         self.optimizer: Optimizer = adamw(lr, weight_decay=0.0)
         self.opt_state = self.optimizer.init(self.params)
         self.history: Optional[EventStream] = None
+        self.events = EventLog()
+        self.builder = BatchBuilder(
+            cfg, stream, fetch_node=self._fetch_node,
+            fetch_edge=self._fetch_edge,
+            edge_feat_fn=self.store.get_edge_features,
+            memory=self.memory, rng=self.rng)
         self._build_steps()
-        self.timers = {"sample": 0.0, "fetch": 0.0, "train": 0.0,
-                       "ingest": 0.0}
+        self.timers = self.builder.timers
         self._refresh_bytes = 0
 
     # -- jitted steps ----------------------------------------------------
     def _build_steps(self) -> None:
-        cfg = self.cfg
-
-        def apply_memory(params, hops, mem_blobs):
-            """Apply pending raw messages in-graph (trains the GRU)."""
-            out = []
-            for hop, (dstb, nbrb) in zip(hops, mem_blobs):
-                def eff(blob, ids_shape):
-                    new = G.memory_batch_update(
-                        params["memory"], None, blob["mem"],
-                        blob["last_upd"], blob["other_mem"],
-                        blob["e_feat"], blob["msg_t"])
-                    return jnp.where(blob["has"][..., None], new,
-                                     blob["mem"])
-                dmem = eff(dstb, None)
-                nK = hop["nbr_feat"].shape[:2]
-                nmem = eff(nbrb, None).reshape(nK + (-1,))
-                hop = dict(hop)
-                hop["dst_feat"] = jnp.concatenate(
-                    [hop["dst_feat"], dmem], axis=-1)
-                hop["nbr_feat"] = jnp.concatenate(
-                    [hop["nbr_feat"], nmem], axis=-1)
-                out.append(hop)
-            return out
-
-        def forward(params, batch):
-            if cfg.model == "dysat":
-                h = G.dysat_embed(params["gnn"], cfg, batch["snapshots"])
-            else:
-                hops = batch["hops"]
-                if cfg.use_memory:
-                    hops = apply_memory(params, hops, batch["mem_blobs"])
-                h = G.gnn_embed(params["gnn"], cfg, hops,
-                                use_pallas=self.use_pallas)
-            n = h.shape[0] // 3       # seeds = [src | dst | neg], static
-            h_src, h_dst, h_neg = h[:n], h[n:2 * n], h[2 * n:3 * n]
-            pos = G.link_score(params["head"], h_src, h_dst)
-            neg = G.link_score(params["head"], h_src, h_neg)
-            scores = jnp.concatenate([pos, neg])
-            labels = jnp.concatenate([jnp.ones_like(pos),
-                                      jnp.zeros_like(neg)])
-            loss = G.bce_logits(scores, labels)
-            return loss, (scores, labels)
+        forward = make_forward(self.cfg, self.use_pallas)
 
         def train_step(params, opt_state, batch):
             (loss, aux), grads = jax.value_and_grad(
@@ -244,7 +397,11 @@ class ContinuousTrainer:
     # -- plumbing ---------------------------------------------------------
     def ingest(self, batch: EventStream) -> float:
         t0 = time.perf_counter()
+        base = self.graph.num_edges
         eids = self.graph.add_edges(batch.src, batch.dst, batch.ts)
+        # event-level ids (add_edges duplicates eids for undirected)
+        self.events.append(batch.ts,
+                           base + np.arange(len(batch.src), dtype=np.int64))
         nodes = np.unique(np.concatenate([batch.src, batch.dst]))
         self.store.put_node_features(nodes, batch.node_features(nodes))
         uniq_e = np.unique(eids)
@@ -272,59 +429,21 @@ class ContinuousTrainer:
 
     def _make_batch(self, src, dst, ts) -> Dict[str, Any]:
         n = len(src)
-        neg = sample_negatives(self.stream, n, self.rng)
+        neg = self.builder.negatives(n)
         seeds = np.concatenate([src, dst, neg]).astype(np.int64)
         seed_ts = np.concatenate([ts, ts, ts]).astype(np.float32)
-        if self.cfg.model == "dysat":
-            # one hop-set per time-window snapshot (newest last)
-            snapshots = []
-            for i in reversed(range(self.cfg.n_snapshots)):
-                t0 = time.perf_counter()
-                layers = self.sampler.sample(
-                    seeds, seed_ts - i * self.cfg.window)
-                self.timers["sample"] += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                snapshots.append(assemble(layers, self._fetch_node,
-                                          self._fetch_edge))
-                self.timers["fetch"] += time.perf_counter() - t0
-            return {"snapshots": snapshots, "n_pos": n}
-
-        t0 = time.perf_counter()
-        layers = self.sampler.sample(seeds, seed_ts)
-        self.timers["sample"] += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        hops = assemble(layers, self._fetch_node, self._fetch_edge)
-        batch: Dict[str, Any] = {"hops": hops, "n_pos": n}
-        if self.cfg.use_memory:
-            blobs = []
-            for layer in layers:
-                dstb = self.memory.gather(
-                    np.asarray(layer.dst_nodes, np.int64),
-                    self.store.get_edge_features)
-                nbrb = self.memory.gather(
-                    np.asarray(layer.nbr_ids, np.int64).reshape(-1),
-                    self.store.get_edge_features)
-                blobs.append((dstb, nbrb))
-            batch["mem_blobs"] = blobs
-        self.timers["fetch"] += time.perf_counter() - t0
+        batch = self.builder.build(seeds, seed_ts, self.sampler.sample)
+        batch["n_pos"] = n
         return batch
 
     # -- public API --------------------------------------------------------
     def evaluate(self, events: EventStream) -> Dict[str, float]:
-        scores_all, labels_all, losses = [], [], []
-        for src, dst, ts, _ in chronological_batches(
-                events, self.cfg.batch_size):
+        def step(src, dst, ts):
             batch = self._make_batch(src, dst, ts)
             loss, (scores, labels) = self._eval_step(self.params, batch)
-            scores_all.append(np.asarray(scores))
-            labels_all.append(np.asarray(labels))
-            losses.append(float(loss))
-        s = np.concatenate(scores_all)
-        l = np.concatenate(labels_all)
-        return {"ap": G.average_precision(s, l),
-                "loss": float(np.mean(losses)),
-                "acc": float(((s > 0) == l).mean())}
+            return loss, scores, labels
+
+        return eval_metrics(events, self.cfg.batch_size, step)
 
     def train_round(self, new_events: EventStream, *, epochs: int = 3,
                     replay_ratio: float = 0.0) -> RoundMetrics:
@@ -375,10 +494,7 @@ class ContinuousTrainer:
 
     def _eids_for(self, src, dst, ts) -> np.ndarray:
         """Edge ids of just-ingested events (assigned sequentially)."""
-        # events were ingested in chronological order; locate by timestamp
-        pos = np.searchsorted(self.graph.ts[:self.graph.arena_used], ts)
-        pos = np.clip(pos, 0, self.graph.arena_used - 1)
-        return self.graph.eid[pos]
+        return self.events.eids_for(ts)
 
 
 def _concat_streams(a: EventStream, b: EventStream) -> EventStream:

@@ -74,18 +74,45 @@ class Dispatcher:
         eids = self._next_eid + np.arange(len(src), dtype=np.int64)
         self._next_eid += len(src)
 
-        ends = [(src, dst)] if not self.undirected else \
-            [(src, dst), (dst, src)]
-        for s, d in ends:
-            own = owner_of(s, self.n_parts)
-            for p in range(self.n_parts):
-                sel = own == p
-                if not sel.any():
-                    continue
-                # 8B src + 8B dst + 8B ts + 8B eid per event on the wire
-                self.bytes_dispatched += int(sel.sum()) * 32
-                self.partitions[p].add_edges(s[sel], d[sel], ts[sel],
-                                             eids[sel])
+        if self.undirected:
+            # merge both directions time-sorted BEFORE dispatching, so
+            # every partition still ingests chronologically (mirrors
+            # DynamicGraph.add_edges' own undirected handling)
+            s_all = np.concatenate([src, dst])
+            d_all = np.concatenate([dst, src])
+            t_all = np.concatenate([ts, ts])
+            e_all = np.concatenate([eids, eids])
+            order = np.argsort(t_all, kind="stable")
+            s_all, d_all = s_all[order], d_all[order]
+            t_all, e_all = t_all[order], e_all[order]
+        else:
+            s_all, d_all, t_all, e_all = src, dst, ts, eids
+        own = owner_of(s_all, self.n_parts)
+        for p in range(self.n_parts):
+            sel = own == p
+            if not sel.any():
+                continue
+            # 8B src + 8B dst + 8B ts + 8B eid per event on the wire
+            self.bytes_dispatched += int(sel.sum()) * 32
+            self.partitions[p].add_edges(s_all[sel], d_all[sel],
+                                         t_all[sel], e_all[sel])
+        return eids
+
+    def ingest(self, events, store=None) -> np.ndarray:
+        """One continuous-learning ingest step: dispatch the event
+        batch's edges to their owner partitions and (optionally) the
+        node/edge features to the hash-co-located feature store shards —
+        the paper's ingestion front-end in one call. Feature payloads
+        are byte-accounted like the edge dispatch. Returns the global
+        edge ids assigned to the batch (one per event)."""
+        eids = self.add_edges(events.src, events.dst, events.ts)
+        if store is not None:
+            nodes = np.unique(np.concatenate([events.src, events.dst]))
+            store.put_node_features(nodes, events.node_features(nodes))
+            store.put_edge_features(eids, events.src,
+                                    events.edge_features(eids))
+            self.bytes_dispatched += (int(nodes.size) * events.d_node
+                                      + len(eids) * events.d_edge) * 4
         return eids
 
     def stats(self) -> PartitionStats:

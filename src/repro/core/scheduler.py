@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.core.partition import GraphPartition, owner_of
 from repro.core.sampling import NULL, SampledLayer, TemporalSampler
-from repro.core.snapshot import build_snapshot
+from repro.core.snapshot import (GraphSnapshot, build_snapshot,
+                                 refresh_snapshot)
 
 
 @dataclasses.dataclass
@@ -44,10 +45,14 @@ class DistributedSamplerSystem:
         self.n_machines = len(partitions)
         self.n_gpus = n_gpus
         self.fanouts = tuple(fanouts)
-        # one sampler per (machine, rank): rank share the machine snapshot
+        # one snapshot per machine, one sampler per (machine, rank):
+        # ranks share the machine snapshot object so refresh() can chain
+        # SnapshotDeltas into every rank's device mirror
+        self.snaps: List[GraphSnapshot] = []
         self.samplers: List[List[TemporalSampler]] = []
         for m, part in enumerate(self.partitions):
             snap = build_snapshot(part.graph)
+            self.snaps.append(snap)
             self.samplers.append([
                 TemporalSampler(snap, fanouts, policy=policy,
                                 window=window, scan_pages=scan_pages,
@@ -56,13 +61,29 @@ class DistributedSamplerSystem:
         self._load = np.zeros((self.n_machines, n_gpus), np.int64)
         self.request_bytes = 0
         self.response_bytes = 0
+        self.last_refresh_bytes = 0
+        self.total_refresh_bytes = 0
 
-    def refresh(self) -> None:
-        """Rebuild per-machine snapshots after graph updates."""
+    def refresh(self) -> int:
+        """Publish per-partition SnapshotDeltas to every rank sampler.
+
+        Each partition keeps ONE chained snapshot: ``refresh_snapshot``
+        mutates it in place and records the delta, and every rank
+        sampler mirrors the delta onto its device buffers via
+        ``TemporalSampler.refresh`` — O(changed cells) H2D per refresh
+        instead of the former from-scratch ``build_snapshot`` (O(graph)
+        re-upload per rank). Version gaps / tau rebuilds fall back to a
+        full upload inside the sampler (the PR 2 delta protocol).
+        Returns the H2D bytes this refresh moved across all ranks."""
+        total = 0
         for m, part in enumerate(self.partitions):
-            snap = build_snapshot(part.graph)
+            self.snaps[m] = refresh_snapshot(part.graph, self.snaps[m])
             for s in self.samplers[m]:
-                s.refresh(snap)
+                s.refresh(self.snaps[m])
+                total += s.last_refresh_bytes
+        self.last_refresh_bytes = total
+        self.total_refresh_bytes += total
+        return total
 
     def _route_hop(self, trainer_machine: int, rank: int,
                    targets: np.ndarray, times: np.ndarray,
@@ -76,21 +97,31 @@ class DistributedSamplerSystem:
         owners = owner_of(np.maximum(targets, 0), self.n_machines)
         for m in range(self.n_machines):
             sel = (owners == m) & tmask & (targets >= 0)
-            if not sel.any():
+            n_sel = int(sel.sum())
+            if not n_sel:
                 continue
             # static schedule: remote requests go to the same local rank
             worker = self.samplers[m][rank]
-            self._load[m, rank] += int(sel.sum())
+            self._load[m, rank] += n_sel
             if m != trainer_machine:
-                self.request_bytes += int(sel.sum()) * 12   # (id, ts)
-            a, b, c, d = worker.sample_hop(targets[sel], times[sel],
-                                           tmask[sel], k)
-            nbr[sel] = np.asarray(a)
-            eid[sel] = np.asarray(b)
-            ts[sel] = np.asarray(c)
-            msk[sel] = np.asarray(d)
+                self.request_bytes += n_sel * 12   # (id, ts)
+            # pad each request to a power-of-two length (masked rows) so
+            # the per-(shape, fanout) jit cache stays O(log N) even
+            # though ownership splits vary batch to batch
+            idx = np.nonzero(sel)[0]
+            bucket = 1 << (n_sel - 1).bit_length()
+            idx_p = np.concatenate(
+                [idx, np.full(bucket - n_sel, idx[0], idx.dtype)])
+            pmask = np.zeros(bucket, bool)
+            pmask[:n_sel] = True
+            a, b, c, d = worker.sample_hop(targets[idx_p], times[idx_p],
+                                           pmask, k)
+            nbr[idx] = np.asarray(a)[:n_sel]
+            eid[idx] = np.asarray(b)[:n_sel]
+            ts[idx] = np.asarray(c)[:n_sel]
+            msk[idx] = np.asarray(d)[:n_sel]
             if m != trainer_machine:
-                self.response_bytes += int(sel.sum()) * k * 12
+                self.response_bytes += n_sel * k * 12
         return nbr, eid, ts, msk
 
     def sample(self, trainer_machine: int, rank: int, seeds, seed_ts

@@ -1,10 +1,20 @@
-"""Distributed substrate: logical-axis sharding rules + gradient collectives.
+"""Distributed substrate: sharding rules, collectives, continuous loop.
 
 ``repro.dist.sharding``    mesh/rules context, logical-axis constraints,
                            FSDP gather, partition-spec assignment.
 ``repro.dist.collectives`` gradient-reduction primitives (bucketed /
                            quantized / top-k sparsified psum).
+``repro.dist.continuous``  DistributedContinuousTrainer: the paper's
+                           P-machine x G-rank continuous-learning loop
+                           (imported lazily — pulls in the model zoo).
 """
 from repro.dist import collectives, sharding  # noqa: F401
 
-__all__ = ["collectives", "sharding"]
+__all__ = ["collectives", "sharding", "continuous"]
+
+
+def __getattr__(name):          # PEP 562: lazy 'continuous' submodule
+    if name == "continuous":
+        import repro.dist.continuous as m
+        return m
+    raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")

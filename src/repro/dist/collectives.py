@@ -45,6 +45,26 @@ MeshOrAxes = Union[Mesh, str, Sequence[str]]
 _DEFAULT_BUCKET_BYTES = 4 * 1024 * 1024
 
 
+def grad_payload_bytes(grads: PyTree, mode: str, *, bits: int = 8,
+                       frac: float = 0.01) -> int:
+    """Per-step, per-worker wire payload of one gradient reduction.
+
+    ``bucketed`` sends every f32 coordinate; ``quantized`` sends bits/8
+    bytes per coordinate plus one f32 scale per call; ``topk`` sends
+    (int32 index, f32 value) pairs for the ``ceil(frac * n)``
+    transmitted coordinates. Used by the distributed trainer/bench to
+    compare collective modes without simulating a wire."""
+    n = sum(l.size for l in jax.tree_util.tree_leaves(grads))
+    if mode == "bucketed":
+        return n * 4
+    if mode == "quantized":
+        return n * bits // 8 + 4
+    if mode == "topk":
+        k = max(1, min(n, int(round(frac * n))))
+        return k * 8
+    raise ValueError(f"unknown collective mode {mode!r}")
+
+
 def _run(fn, leaves: Tuple[jax.Array, ...], mesh_or_axes: MeshOrAxes):
     """Run ``fn(leaves, axes)`` under a shard_map over a Mesh, or inline
     against already-bound axis names."""

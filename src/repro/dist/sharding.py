@@ -268,6 +268,19 @@ _CORE2: Dict[str, Tuple[Optional[str], ...]] = {
     "embed": ("vocab", "embed_fsdp"),
     "lm_head": ("embed_fsdp", "vocab"),
     "router": (None, None),  # fp32, tiny; replicated for exact routing
+    # GNN-side parameters (models/gnn.py): projection cores follow the
+    # same fsdp x tp layout as the LM blocks. Temporal-attention output
+    # MLP, SAGE/GAT projections, the TGN memory GRU gates and the link
+    # head are all (d_in, d_out) mats; per-head GAT attention vectors
+    # and time-encoding leaves are tiny and stay replicated (1-D leaves
+    # never match a 2-entry rule).
+    "w_out1": ("fsdp", "tp"), "w_out2": ("tp", "fsdp"),
+    "w_self": ("fsdp", "tp"), "w_nbr": ("fsdp", "tp"),
+    "w_dst": ("fsdp", "tp"),
+    "a_dst": (None, None), "a_nbr": (None, None),
+    "w_z": ("fsdp", "tp"), "w_r": ("fsdp", "tp"),
+    "w_n": ("fsdp", "tp"),
+    "w1": ("fsdp", "tp"), "w2": ("fsdp", "tp"),
 }
 # Stacked expert weights (E, d_in, d_out) under a "moe" subtree.
 _MOE_CORE3: Dict[str, Tuple[Optional[str], ...]] = {

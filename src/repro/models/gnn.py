@@ -170,6 +170,19 @@ def init_gnn(cfg: GNNConfig, key: jax.Array) -> PyTree:
     return params
 
 
+def init_params(cfg: GNNConfig, key: jax.Array) -> PyTree:
+    """Full trainable tree for the continuous trainers: gnn + link head
+    (+ TGN memory module when cfg.use_memory). Single source of truth so
+    the single-host and distributed trainers start bit-identical from
+    the same seed."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    params: Dict[str, Any] = {"gnn": init_gnn(cfg, k1),
+                              "head": init_link_head(cfg, k2)}
+    if cfg.use_memory:
+        params["memory"] = init_memory_module(cfg, k3)
+    return params
+
+
 def gnn_embed(params: PyTree, cfg: GNNConfig, hops: List[dict],
               use_pallas: bool = False) -> jnp.ndarray:
     """Bottom-up recursion over L hops -> seed embeddings (N0, d_hidden).
