@@ -1,21 +1,47 @@
-"""Paper Figures 8/10/11: continuous-learning retraining time per
-incremental batch, finetune-epoch sweep, and replay-ratio accuracy.
+"""Paper Figures 8/10/11 + §4.3 overlap: continuous-learning retraining
+time per incremental batch, finetune-epoch sweep, replay-ratio accuracy,
+and the pipelined-executor overlap saving.
 
 Runs the full §3 loop (ingest -> finetune -> evaluate) on a drifting
-synthetic stream with TGN and TGAT; reports per-round wall time split
-(graph update / sampling / fetching / training) and test-then-train AP.
+synthetic stream with TGN and TGAT, twice per model: once strictly
+serial (``overlap=False`` — the measured baseline) and once through the
+double-buffered pipeline engine.  Reports the per-round wall-time split
+(graph update / sampling / fetching / step) and the overlap saving:
+pipelined round wall clock vs the serial sample+fetch+step sum.  The
+two runs are numerically identical (same seeds, same step order), so
+the comparison is purely scheduling.
 """
 from __future__ import annotations
 
 import os
 import time
 
-import numpy as np
 
 from benchmarks.common import emit, save_json
 from repro.configs.tgn_gdelt import GNN_MODELS
 from repro.core.continuous import ContinuousTrainer
 from repro.data.events import synth_ctdg
+
+
+def _rounds_for(tr, stream, warm, n_rounds, rsz):
+    """Warm + n timed rounds; returns per-round metric rows."""
+    tr.ingest(stream.slice(0, warm - 4000))
+    tr.train_round(stream.slice(warm - 4000, warm), epochs=2)
+    rows = []
+    for r in range(n_rounds):
+        lo = warm + r * rsz
+        m = tr.train_round(stream.slice(lo, lo + rsz), epochs=2,
+                           replay_ratio=0.2)
+        rows.append({
+            "ap": m.ap, "loss": m.loss,
+            "ingest_s": m.ingest_s, "sample_s": m.sample_s,
+            "fetch_s": m.fetch_s, "step_s": m.step_s,
+            "loop_s": m.train_s,           # finetune-loop wall clock
+            "serial_sum_s": m.sample_s + m.fetch_s + m.step_s,
+            "refresh_bytes": m.refresh_bytes,
+            "node_hit": m.node_hit_rate, "edge_hit": m.edge_hit_rate,
+        })
+    return rows
 
 
 def run(quick: bool = True) -> None:
@@ -25,6 +51,7 @@ def run(quick: bool = True) -> None:
     stream = synth_ctdg(n_nodes=2_000, n_events=24_000, t_span=100_000,
                         d_node=16, d_edge=12, drift_every=25_000, seed=5)
     warm = 12_000
+    n_rounds = 2 if smoke else 3
     results = {}
 
     for model in ("tgn", "tgat"):
@@ -33,27 +60,53 @@ def run(quick: bool = True) -> None:
                                 fanouts=(8,) if model == "tgn"
                                 else (8, 4),
                                 batch_size=512)
-        tr = ContinuousTrainer(cfg, stream, threshold=32,
-                               cache_ratio=0.1, lr=2e-3, seed=0)
-        tr.ingest(stream.slice(0, warm - 4000))
-        tr.train_round(stream.slice(warm - 4000, warm), epochs=2)
+        per_mode = {}
+        # "warmup" is discarded: it pre-compiles the PROCESS-shared jit
+        # caches (the fused sampler dispatch per shape bucket) over the
+        # exact timed slices, so the serial/pipelined comparison is not
+        # skewed by whichever run happens to execute first
+        for mode, overlap in (("warmup", False), ("serial", False),
+                              ("pipelined", True)):
+            tr = ContinuousTrainer(cfg, stream, threshold=32,
+                                   cache_ratio=0.1, lr=2e-3, seed=0,
+                                   overlap=overlap)
+            rows = _rounds_for(tr, stream, warm,
+                               n_rounds=n_rounds, rsz=3_000)
+            if mode != "warmup":
+                per_mode[mode] = rows
 
-        aps, times = [], []
-        n_rounds = 3
-        rsz = 3_000
-        for r in range(n_rounds):
-            lo = warm + r * rsz
-            m = tr.train_round(stream.slice(lo, lo + rsz), epochs=2,
-                               replay_ratio=0.2)
-            aps.append(m.ap)
-            times.append(m.ingest_s + m.sample_s + m.fetch_s + m.train_s)
-            emit(f"continuous/{model}/round{r}", times[-1] * 1e6,
-                 f"ap={m.ap:.3f};ingest={m.ingest_s:.2f}s;"
-                 f"sample={m.sample_s:.2f}s;fetch={m.fetch_s:.2f}s;"
-                 f"train={m.train_s:.2f}s;"
-                 f"refresh_kB={m.refresh_bytes / 1e3:.0f}")
-        results[model] = {"ap_per_round": aps, "round_s": times,
-                          "refresh_bytes_last_round": m.refresh_bytes}
+        # overlap saving: the pipelined loop hides the jit step behind
+        # the next batch's host-side sample+fetch; the serial run's
+        # stage sum is the honest baseline (its step_s is the full
+        # device time, not just dispatch + residual wait)
+        serial_sum = sum(r["serial_sum_s"] for r in per_mode["serial"])
+        piped_wall = sum(r["loop_s"] for r in per_mode["pipelined"])
+        saved = serial_sum - piped_wall
+        results[model] = {
+            "serial": per_mode["serial"],
+            "pipelined": per_mode["pipelined"],
+            "ap_per_round": [r["ap"] for r in per_mode["pipelined"]],
+            "overlap": {
+                "serial_sample_fetch_step_s": serial_sum,
+                "pipelined_loop_s": piped_wall,
+                "saved_s": saved,
+                "saved_frac": saved / max(serial_sum, 1e-9),
+            },
+        }
+        for r, row in enumerate(per_mode["pipelined"]):
+            emit(f"continuous/{model}/round{r}", row["loop_s"] * 1e6,
+                 f"ap={row['ap']:.3f};ingest={row['ingest_s']:.2f}s;"
+                 f"sample={row['sample_s']:.2f}s;"
+                 f"fetch={row['fetch_s']:.2f}s;"
+                 f"step={row['step_s']:.2f}s;"
+                 f"refresh_kB={row['refresh_bytes'] / 1e3:.0f}")
+        emit(f"continuous/{model}/overlap", piped_wall * 1e6,
+             f"serial_sum={serial_sum:.2f}s;pipelined={piped_wall:.2f}s;"
+             f"saved={saved:.2f}s({100 * saved / max(serial_sum, 1e-9):.0f}%)")
+        # scheduling must not change numerics
+        d = max(abs(a["loss"] - b["loss"]) for a, b in
+                zip(per_mode["serial"], per_mode["pipelined"]))
+        assert d <= 1e-5, f"pipelined != serial loss ({d})"
 
     if smoke:
         results["paper_claim"] = "sweeps skipped (BENCH_QUICK=1)"
@@ -101,7 +154,8 @@ def run(quick: bool = True) -> None:
     results["paper_claim"] = ("more frequent retraining within the same "
                               "budget lifts AP (Fig.11); 2-3 epochs is "
                               "the sweet spot (Fig.10); replay fights "
-                              "forgetting (Fig.11b)")
+                              "forgetting (Fig.11b); sample/fetch of "
+                              "batch t+1 overlaps step t (§4.3)")
     save_json("continuous", results)
 
 

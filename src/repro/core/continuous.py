@@ -1,4 +1,4 @@
-"""Continuous temporal GNN learning driver (GNNFlow §3).
+"""Continuous temporal GNN learning driver (GNNFlow §3, §4.3).
 
 Workflow per incremental batch G(t, t+1):
   1. evaluate the CURRENT model on the new events (test-then-train AP);
@@ -9,16 +9,29 @@ Workflow per incremental batch G(t, t+1):
   4. cache lifecycle: reuse across rounds (never re-initialized),
      snapshot at round start, restore at each epoch start (§4.3).
 
+Execution is staged through ``repro.core.pipeline.PipelineEngine``:
+batch *t+1*'s sampling and feature assembly run on the host while
+batch *t*'s jitted step executes on the device (double buffering), with
+host/device sync only at stage boundaries.  ``ContinuousTrainer`` is
+both the single-host trainer and the shared skeleton that
+``repro.dist.continuous.DistributedContinuousTrainer`` subclasses —
+single host is the 1-partition, 1-worker degenerate case; the
+constructor, cache/fetch plumbing, round driver and evaluation loop
+live here once.
+
 TGN's node memory follows the paper/TGN scheme: raw messages are staged
 per node and applied lazily *inside the training graph* (so the GRU
 memory updater gets gradients), then committed to the store after each
-optimizer step.
+optimizer step.  That commit is the one cross-batch dependency the
+pipeline must respect: memory blobs are assembled by
+``FeatureAssembler.finalize`` at launch time, after the previous step's
+completion, never during prefetch.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +41,8 @@ from repro.configs.tgn_gdelt import GNNConfig
 from repro.core.dgraph import DynamicGraph
 from repro.core.feature_cache import FeatureCache
 from repro.core.feature_store import DistributedFeatureStore
-from repro.core.mfg import assemble
+from repro.core.pipeline import (FeatureAssembler, PipelineEngine,
+                                 pad_tail, pow2_pad_len)
 from repro.core.sampling import TemporalSampler
 from repro.core.snapshot import build_snapshot, refresh_snapshot
 from repro.data.events import EventStream
@@ -175,8 +189,11 @@ def make_forward(cfg: GNNConfig, use_pallas: bool = False):
 
     Shared by ContinuousTrainer and repro.dist.continuous — the
     distributed trainer runs the SAME function per shard under a
-    shard_map, so equal shard sizes make the psum-averaged loss exactly
-    the single-host batch loss."""
+    shard_map.  The loss is a mask-weighted mean over the batch's valid
+    lanes (``batch["seed_mask"]``): padded ragged-tail lanes carry
+    weight 0, so a padded shard contributes exactly its real events and
+    the psum-combined distributed loss equals the single-host
+    global-batch loss."""
 
     def apply_memory(params, hops, mem_blobs):
         """Apply pending raw messages in-graph (trains the GRU)."""
@@ -216,97 +233,29 @@ def make_forward(cfg: GNNConfig, use_pallas: bool = False):
         scores = jnp.concatenate([pos, neg])
         labels = jnp.concatenate([jnp.ones_like(pos),
                                   jnp.zeros_like(neg)])
-        loss = G.bce_logits(scores, labels)
-        return loss, (scores, labels)
+        w = jnp.concatenate([batch["seed_mask"], batch["seed_mask"]])
+        loss = G.bce_logits(scores, labels, weights=w)
+        return loss, (scores, labels, w)
 
     return forward
 
 
-def eval_metrics(events: EventStream, batch_size: int, step_fn
-                 ) -> Dict[str, float]:
-    """Shared test-then-train evaluation loop: ``step_fn(src, dst, ts)``
-    returns (loss, scores, labels) for one chronological batch; the
-    aggregation (AP / mean loss / accuracy) is identical for the
-    single-host and distributed trainers."""
-    scores_all, labels_all, losses = [], [], []
-    for src, dst, ts, _ in chronological_batches(events, batch_size):
-        loss, scores, labels = step_fn(src, dst, ts)
-        scores_all.append(np.asarray(scores))
-        labels_all.append(np.asarray(labels))
-        losses.append(float(loss))
-    s = np.concatenate(scores_all)
-    l = np.concatenate(labels_all)
-    return {"ap": G.average_precision(s, l),
-            "loss": float(np.mean(losses)),
-            "acc": float(((s > 0) == l).mean())}
-
-
 class BatchBuilder:
-    """Event slice -> jit-ready batch, with sampling/fetch accounting.
+    """Negative-sampling stream shared by both trainers: they draw from
+    the same RNG in the same order (once per global batch), which is
+    what keeps the single-host and distributed runs in lockstep.
+    Feature staging lives in ``FeatureAssembler``
+    (``repro.core.pipeline``) — the trainers' staging hooks call its
+    ``prefetch``/``finalize`` directly so the pipeline can split them
+    around the in-flight step."""
 
-    Shared by both trainers: they consume the same negative-sampling RNG
-    stream and assemble identical tensors. The sampler is injected per
-    call (``sample_fn``), so the single-host trainer passes its fused
-    ``TemporalSampler.sample`` while the distributed trainer routes each
-    worker's shard through the static schedule — everything else
-    (caches, memory blobs, feature fetch) is the same code path."""
-
-    def __init__(self, cfg: GNNConfig, stream: EventStream, *,
-                 fetch_node, fetch_edge, edge_feat_fn=None,
-                 memory: Optional["TGNMemory"] = None,
+    def __init__(self, stream: EventStream, *,
                  rng: Optional[np.random.Generator] = None):
-        self.cfg = cfg
         self.stream = stream
-        self.fetch_node = fetch_node
-        self.fetch_edge = fetch_edge
-        self.edge_feat_fn = edge_feat_fn
-        self.memory = memory
         self.rng = rng if rng is not None else np.random.default_rng(0)
-        self.timers = {"sample": 0.0, "fetch": 0.0, "train": 0.0,
-                       "ingest": 0.0}
 
     def negatives(self, n: int) -> np.ndarray:
         return sample_negatives(self.stream, n, self.rng)
-
-    def build(self, seeds: np.ndarray, seed_ts: np.ndarray,
-              sample_fn) -> Dict[str, Any]:
-        """Sample + fetch + assemble one batch of [src|dst|neg] seeds."""
-        cfg = self.cfg
-        seeds = np.asarray(seeds, np.int64)
-        seed_ts = np.asarray(seed_ts, np.float32)
-        if cfg.model == "dysat":
-            # one hop-set per time-window snapshot (newest last)
-            snapshots = []
-            for i in reversed(range(cfg.n_snapshots)):
-                t0 = time.perf_counter()
-                layers = sample_fn(seeds, seed_ts - i * cfg.window)
-                self.timers["sample"] += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                snapshots.append(assemble(layers, self.fetch_node,
-                                          self.fetch_edge))
-                self.timers["fetch"] += time.perf_counter() - t0
-            return {"snapshots": snapshots}
-
-        t0 = time.perf_counter()
-        layers = sample_fn(seeds, seed_ts)
-        self.timers["sample"] += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        hops = assemble(layers, self.fetch_node, self.fetch_edge)
-        batch: Dict[str, Any] = {"hops": hops}
-        if cfg.use_memory:
-            blobs = []
-            for layer in layers:
-                dstb = self.memory.gather(
-                    np.asarray(layer.dst_nodes, np.int64),
-                    self.edge_feat_fn)
-                nbrb = self.memory.gather(
-                    np.asarray(layer.nbr_ids, np.int64).reshape(-1),
-                    self.edge_feat_fn)
-                blobs.append((dstb, nbrb))
-            batch["mem_blobs"] = blobs
-        self.timers["fetch"] += time.perf_counter() - t0
-        return batch
 
 
 # ---------------------------------------------------------------------------
@@ -322,29 +271,33 @@ class RoundMetrics:
     ingest_s: float
     sample_s: float
     fetch_s: float
-    train_s: float
+    train_s: float            # finetune-loop wall clock (overlapped)
     node_hit_rate: float
     edge_hit_rate: float
     refresh_bytes: int = 0    # H2D payload of this round's device refresh
+    step_s: float = 0.0       # jit step time: dispatch + boundary sync
 
 
 class ContinuousTrainer:
-    """Single-host trainer (the distributed pieces have their own tests/
-    benches; this driver wires the full §3 loop)."""
+    """Single-host trainer AND the shared engine-driven skeleton: the
+    distributed trainer subclasses this, overriding only topology
+    (`_init_sampling`), the jitted steps (`_build_steps`), batch
+    staging (`_stage_train`/`_stage_eval` + launches) and metrics.
+    Single host is the 1-partition, 1-worker degenerate case."""
 
     def __init__(self, cfg: GNNConfig, stream: EventStream, *,
                  threshold: int = 64, cache_ratio: float = 0.03,
                  cache_policy: str = "lru", lam: float = 0.2,
                  use_pallas: bool = False, lr: float = 1e-3,
-                 seed: int = 0):
+                 seed: int = 0, overlap: bool = True):
         self.cfg = cfg
         self.stream = stream
         self.use_pallas = use_pallas
         self.rng = np.random.default_rng(seed)
 
-        self.graph = DynamicGraph(threshold=threshold, undirected=True)
+        self._init_sampling(threshold, seed)    # sets self.n_partitions
         self.store = DistributedFeatureStore(
-            1, d_node=cfg.d_node, d_edge=cfg.d_edge,
+            self.n_partitions, d_node=cfg.d_node, d_edge=cfg.d_edge,
             d_memory=cfg.d_memory if cfg.use_memory else 0)
         cache_n = max(64, int(cache_ratio * stream.n_nodes))
         cache_e = max(64, int(cache_ratio * len(stream)))
@@ -355,29 +308,39 @@ class ContinuousTrainer:
             cache_e, cfg.d_edge, id_space=len(stream) + 1,
             policy=cache_policy, lam=lam)
 
-        self.sampler = TemporalSampler(
-            DynamicGraph(threshold=threshold), cfg.fanouts,
-            policy=cfg.sampling, window=cfg.window,
-            use_pallas=use_pallas, seed=seed)
-        self._snap = None
-
         self.params: Dict[str, Any] = G.init_params(
             cfg, jax.random.PRNGKey(seed))
         self.memory = TGNMemory(cfg, self.store) if cfg.use_memory \
             else None
+        self.events = EventLog()
+        self.assembler = FeatureAssembler(
+            cfg, fetch_node=self._fetch_node, fetch_edge=self._fetch_edge,
+            edge_feat_fn=self.store.get_edge_features, memory=self.memory,
+            timers={"sample": 0.0, "fetch": 0.0, "ingest": 0.0,
+                    "step": 0.0})
+        self.builder = BatchBuilder(stream, rng=self.rng)
+        self.timers = self.assembler.timers
 
         self.optimizer: Optimizer = adamw(lr, weight_decay=0.0)
         self.opt_state = self.optimizer.init(self.params)
         self.history: Optional[EventStream] = None
-        self.events = EventLog()
-        self.builder = BatchBuilder(
-            cfg, stream, fetch_node=self._fetch_node,
-            fetch_edge=self._fetch_edge,
-            edge_feat_fn=self.store.get_edge_features,
-            memory=self.memory, rng=self.rng)
-        self._build_steps()
-        self.timers = self.builder.timers
         self._refresh_bytes = 0
+        self._init_dist_state()
+        self._build_steps()
+        self.engine = PipelineEngine(overlap=overlap)
+
+    # -- topology hooks (overridden by the distributed trainer) -----------
+    def _init_sampling(self, threshold: int, seed: int) -> None:
+        self.n_partitions = 1
+        self.graph = DynamicGraph(threshold=threshold, undirected=True)
+        self.sampler = TemporalSampler(
+            DynamicGraph(threshold=threshold), self.cfg.fanouts,
+            policy=self.cfg.sampling, window=self.cfg.window,
+            use_pallas=self.use_pallas, seed=seed)
+        self._snap = None
+
+    def _init_dist_state(self) -> None:
+        pass
 
     # -- jitted steps ----------------------------------------------------
     def _build_steps(self) -> None:
@@ -390,8 +353,7 @@ class ContinuousTrainer:
                                                         params)
             return new_params, new_opt, loss, aux
 
-        self._train_step = jax.jit(train_step,
-                                   static_argnames=())
+        self._train_step = jax.jit(train_step)
         self._eval_step = jax.jit(forward)
 
     # -- plumbing ---------------------------------------------------------
@@ -427,32 +389,81 @@ class ContinuousTrainer:
         return self.edge_cache.fetch(
             eids, lambda miss: self.store.get_edge_features(miss))
 
-    def _make_batch(self, src, dst, ts) -> Dict[str, Any]:
+    # -- pipeline stages ---------------------------------------------------
+    def _stage_batch(self, src, dst, ts) -> Dict[str, Any]:
+        """Prefetch one [src|dst|neg] batch; ragged tails are padded
+        (pow2, loss-masked lanes) so the jitted step's shape — and its
+        compilation — is shared across rounds."""
         n = len(src)
         neg = self.builder.negatives(n)
+        m = pow2_pad_len(n, self.cfg.batch_size)
+        src, dst, neg, ts = pad_tail((src, dst, neg, ts), n, m)
+        mask = np.zeros(m, np.float32)
+        mask[:n] = 1.0
         seeds = np.concatenate([src, dst, neg]).astype(np.int64)
         seed_ts = np.concatenate([ts, ts, ts]).astype(np.float32)
-        batch = self.builder.build(seeds, seed_ts, self.sampler.sample)
-        batch["n_pos"] = n
-        return batch
+        return self.assembler.prefetch(seeds, seed_ts,
+                                       self.sampler.sample, mask)
+
+    def _stage_train(self, item) -> Dict[str, Any]:
+        src, dst, ts, _ = item
+        return self._stage_batch(src, dst, ts)
+
+    _stage_eval = _stage_train
+
+    def _launch_train(self, item, staged):
+        batch = self.assembler.finalize(staged)
+        t0 = time.perf_counter()
+        self.params, self.opt_state, loss, _ = self._train_step(
+            self.params, self.opt_state, batch)
+        self.timers["step"] += time.perf_counter() - t0
+        return loss
+
+    def _launch_eval(self, item, staged):
+        batch = self.assembler.finalize(staged)
+        loss, (scores, labels, w) = self._eval_step(self.params, batch)
+        return loss, scores, labels, w
+
+    def _complete_train(self, loss, item) -> float:
+        """Stage boundary: block on the in-flight step, then apply its
+        host side effects (TGN raw-message commit)."""
+        src, dst, ts, _ = item
+        t0 = time.perf_counter()
+        loss = float(loss)      # block_until_ready on the whole step
+        self.timers["step"] += time.perf_counter() - t0
+        if self.cfg.use_memory:
+            self.memory.commit_and_stage(
+                self.params["memory"], src, dst, ts,
+                self.events.eids_for(ts), self.store.get_edge_features)
+        return loss
 
     # -- public API --------------------------------------------------------
     def evaluate(self, events: EventStream) -> Dict[str, float]:
-        def step(src, dst, ts):
-            batch = self._make_batch(src, dst, ts)
-            loss, (scores, labels) = self._eval_step(self.params, batch)
-            return loss, scores, labels
+        scores_all, labels_all, losses = [], [], []
 
-        return eval_metrics(events, self.cfg.batch_size, step)
+        def complete(handle, item):
+            loss, scores, labels, w = handle
+            keep = np.asarray(w) > 0    # drop padded ragged-tail lanes
+            losses.append(float(loss))
+            scores_all.append(np.asarray(scores)[keep])
+            labels_all.append(np.asarray(labels)[keep])
+
+        self.engine.run(
+            chronological_batches(events, self.cfg.batch_size),
+            prefetch=self._stage_eval, launch=self._launch_eval,
+            complete=complete)
+        s = np.concatenate(scores_all)
+        l = np.concatenate(labels_all)
+        return {"ap": G.average_precision(s, l),
+                "loss": float(np.mean(losses)),
+                "acc": float(((s > 0) == l).mean())}
 
     def train_round(self, new_events: EventStream, *, epochs: int = 3,
                     replay_ratio: float = 0.0) -> RoundMetrics:
-        """Paper §3: evaluate-then-finetune on one incremental batch."""
-        for k in self.timers:
-            self.timers[k] = 0.0
-        self._refresh_bytes = 0
-        self.node_cache.reset_stats()
-        self.edge_cache.reset_stats()
+        """Paper §3: evaluate-then-finetune on one incremental batch.
+        The finetune loop runs through the pipeline engine: the next
+        batch's sampling/fetching overlaps the in-flight train step."""
+        self._reset_round_stats()
 
         ev = self.evaluate(new_events)          # test-then-train
         self.ingest(new_events)
@@ -467,34 +478,35 @@ class ContinuousTrainer:
         for ep in range(epochs):
             self.node_cache.restore_epoch()
             self.edge_cache.restore_epoch()
-            for src, dst, ts, idx in chronological_batches(
-                    train_set, self.cfg.batch_size):
-                batch = self._make_batch(src, dst, ts)
-                tt = time.perf_counter()
-                self.params, self.opt_state, loss, _ = self._train_step(
-                    self.params, self.opt_state, batch)
-                self.timers["train"] += time.perf_counter() - tt
-                last_loss = float(loss)
-                if self.cfg.use_memory:
-                    self.memory.commit_and_stage(
-                        self.params["memory"], src, dst, ts,
-                        self._eids_for(src, dst, ts),
-                        self.store.get_edge_features)
+            losses = self.engine.run(
+                chronological_batches(train_set, self.cfg.batch_size),
+                prefetch=self._stage_train, launch=self._launch_train,
+                complete=self._complete_train)
+            if losses:
+                last_loss = losses[-1]
         train_s = time.perf_counter() - t0
 
         self.history = (train_set if self.history is None
                         else _concat_streams(self.history, new_events))
+        return self._round_metrics(ev, last_loss, train_s)
+
+    # -- round bookkeeping hooks -------------------------------------------
+    def _reset_round_stats(self) -> None:
+        for k in self.timers:
+            self.timers[k] = 0.0
+        self._refresh_bytes = 0
+        self.node_cache.reset_stats()
+        self.edge_cache.reset_stats()
+
+    def _round_metrics(self, ev, last_loss, train_s) -> RoundMetrics:
         return RoundMetrics(
             ap=ev["ap"], auc_like=ev["acc"], loss=last_loss,
             ingest_s=self.timers["ingest"], sample_s=self.timers["sample"],
             fetch_s=self.timers["fetch"], train_s=train_s,
             node_hit_rate=self.node_cache.hit_rate,
             edge_hit_rate=self.edge_cache.hit_rate,
-            refresh_bytes=self._refresh_bytes)
-
-    def _eids_for(self, src, dst, ts) -> np.ndarray:
-        """Edge ids of just-ingested events (assigned sequentially)."""
-        return self.events.eids_for(ts)
+            refresh_bytes=self._refresh_bytes,
+            step_s=self.timers["step"])
 
 
 def _concat_streams(a: EventStream, b: EventStream) -> EventStream:

@@ -178,6 +178,9 @@ class FeatureCache:
         self.use_pallas = use_pallas
         self.hits = 0
         self.accesses = 0
+        # hit mask of the latest fetch(), aligned with its `ids` arg
+        # (callers bucket hits per owner partition from it)
+        self.last_hit: Optional[np.ndarray] = None
         self._round_snapshot: Optional[CacheState] = None
 
     # -- core ops ------------------------------------------------------
@@ -224,6 +227,7 @@ class FeatureCache:
             miss_feats[need] = fetch_missing(ids_pad[need])
         out = jnp.where(hit[:, None], feats, jnp.asarray(miss_feats))
         self.update(ids_j, hit, miss_feats)
+        self.last_hit = hit_np[:n]
         return out[:n]
 
     # -- reuse & restoration (§4.3) -------------------------------------

@@ -1,7 +1,8 @@
 """Distributed continuous temporal-GNN training (GNNFlow §4.4–§5).
 
 The full paper loop across P simulated machines × G trainer ranks on the
-(fake) multi-device host mesh:
+(fake) multi-device host mesh, run through the staged pipeline engine
+(``repro.core.pipeline``):
 
   ingest   — ``Dispatcher`` splits each incremental event batch by owner
              into per-machine ``GraphPartition``s and hash-co-located
@@ -12,23 +13,30 @@ The full paper loop across P simulated machines × G trainer ranks on the
   sample   — the static load-balancing schedule routes every worker's
              k-hop requests to the owner machine's same-rank sampler
              (byte/CV-accounted; the paper measures CV < 0.06).
+  fetch    — per-worker shards assemble through the FeatureCache in
+             front of the partitioned feature store.  Sample + fetch of
+             batch *t+1* (including the partition-remote requests) run
+             on the host while batch *t*'s shard_map step executes —
+             the paper's fetch/train overlap.
   train    — hand-rolled data parallelism: the global batch is split
-             into P*G equal shards, every worker computes gradients
-             under one ``shard_map`` over the 'dp' mesh axis, and
-             gradients are summed with ``repro.dist.collectives``
-             (exact ``bucketed_psum`` by default; int8/fp16-quantized
-             or top-k-sparsified with error feedback selectable via
+             into P*G shards, every worker computes gradients under one
+             ``shard_map`` over the 'dp' mesh axis, and gradients are
+             summed with ``repro.dist.collectives`` (exact
+             ``bucketed_psum`` by default; int8/fp16-quantized or
+             top-k-sparsified with error feedback selectable via
              ``DistConfig.collective``), with optional gradient
-             accumulation over micro-batches. One replicated optimizer
+             accumulation over micro-batches.  One replicated optimizer
              step applies the worker-average.
 
-Equal shard sizes make the psum-average of shard-mean gradients EXACTLY
-the global-batch mean, so with the exact collective this trainer
-reproduces the single-host ``ContinuousTrainer`` step for step (tests
-assert ≤ 1e-4 loss parity over multiple rounds); the lossy collectives
-track it within an error-feedback band. Global batches that do not
-split evenly fall back to a replicated single-worker step (identical
-math, no reduction), so ragged stream tails never break parity.
+Per-lane loss masking makes sharding exact for ANY batch size: shards
+carry a ``seed_mask``, each worker contributes ``W * masked_sum /
+total`` to the psum, and the combined gradient is exactly the
+global-batch mean over real events.  Ragged stream tails are therefore
+padded (pow2, masked lanes) and take the SAME shard_map collective path
+as full batches — there is no replicated single-worker fallback — while
+reproducing the single-host ``ContinuousTrainer`` step for step with
+the exact collective (tests assert ≤ 1e-4 loss parity over multiple
+rounds); the lossy collectives track it within an error-feedback band.
 
 Machines are in-process objects and "RPC" is byte-accounted in-process
 calls (DESIGN.md §2); the schedule, the delta protocol, the collective
@@ -47,19 +55,12 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.tgn_gdelt import DistConfig, GNNConfig
-from repro.core.continuous import (BatchBuilder, EventLog, RoundMetrics,
-                                   TGNMemory, _concat_streams,
-                                   eval_metrics, make_forward)
-from repro.core.feature_cache import FeatureCache
-from repro.core.feature_store import DistributedFeatureStore
-from repro.core.partition import Dispatcher, GraphPartition
+from repro.core.continuous import ContinuousTrainer, RoundMetrics
+from repro.core.partition import Dispatcher, GraphPartition, owner_of
 from repro.core.scheduler import DistributedSamplerSystem
 from repro.data.events import EventStream
-from repro.data.loader import chronological_batches, replay_mix
 from repro.dist import collectives as C
 from repro.dist.sharding import shard_map
-from repro.models import gnn as G
-from repro.train.optimizer import Optimizer, adamw
 
 
 @dataclasses.dataclass
@@ -69,6 +70,9 @@ class DistRoundMetrics(RoundMetrics):
     response_bytes: int = 0     # sampling RPC response payload
     reduce_bytes: int = 0       # per-worker gradient wire payload
     load_cv: float = 0.0        # worker-load CV of the static schedule
+    collective_steps: int = 0   # optimizer steps (ALL via shard_map)
+    node_hit_per_part: Tuple[float, ...] = ()
+    edge_hit_per_part: Tuple[float, ...] = ()
 
 
 def _unstack(tree):
@@ -76,21 +80,29 @@ def _unstack(tree):
     return jax.tree.map(lambda x: x[0], tree)
 
 
-class DistributedContinuousTrainer:
+class DistributedContinuousTrainer(ContinuousTrainer):
     """P×G data-parallel continuous trainer over partitioned graph,
-    feature and sampler state — the paper's full distributed loop."""
+    feature and sampler state — the paper's full distributed loop.
+    Subclasses the single-host trainer: only topology, the shard_map
+    steps and the sharded batch staging differ; the round driver, cache
+    lifecycle and pipeline overlap are inherited."""
 
     def __init__(self, cfg: GNNConfig, stream: EventStream,
                  dist: Optional[DistConfig] = None, *,
                  threshold: int = 64, cache_ratio: float = 0.03,
                  cache_policy: str = "lru", lam: float = 0.2,
                  use_pallas: bool = False, lr: float = 1e-3,
-                 seed: int = 0):
-        dist = dist if dist is not None else DistConfig()
-        self.cfg = cfg
-        self.stream = stream
-        self.dist = dist
-        self.use_pallas = use_pallas
+                 seed: int = 0, overlap: bool = True):
+        self.dist = dist if dist is not None else DistConfig()
+        super().__init__(cfg, stream, threshold=threshold,
+                         cache_ratio=cache_ratio,
+                         cache_policy=cache_policy, lam=lam,
+                         use_pallas=use_pallas, lr=lr, seed=seed,
+                         overlap=overlap)
+
+    # -- topology hooks ----------------------------------------------------
+    def _init_sampling(self, threshold: int, seed: int) -> None:
+        dist = self.dist
         W = dist.n_workers
         devs = jax.devices()
         if len(devs) < W:
@@ -99,38 +111,18 @@ class DistributedContinuousTrainer:
                 f"G={dist.n_gpus}, got {len(devs)}; set XLA_FLAGS="
                 f"--xla_force_host_platform_device_count={W}")
         self.mesh = Mesh(np.asarray(devs[:W]), ("dp",))
+        self.n_partitions = dist.n_machines
 
         parts = [GraphPartition(p, dist.n_machines, threshold=threshold)
                  for p in range(dist.n_machines)]
         self.dispatcher = Dispatcher(parts, undirected=True)
         self.samplers = DistributedSamplerSystem(
-            parts, dist.n_gpus, cfg.fanouts, policy=cfg.sampling,
-            window=cfg.window, scan_pages=dist.scan_pages, seed=seed)
-        self.store = DistributedFeatureStore(
-            dist.n_machines, d_node=cfg.d_node, d_edge=cfg.d_edge,
-            d_memory=cfg.d_memory if cfg.use_memory else 0)
-        cache_n = max(64, int(cache_ratio * stream.n_nodes))
-        cache_e = max(64, int(cache_ratio * len(stream)))
-        self.node_cache = FeatureCache(
-            cache_n, cfg.d_node, id_space=stream.n_nodes + 1,
-            policy=cache_policy, lam=lam)
-        self.edge_cache = FeatureCache(
-            cache_e, cfg.d_edge, id_space=len(stream) + 1,
-            policy=cache_policy, lam=lam)
+            parts, dist.n_gpus, self.cfg.fanouts, policy=self.cfg.sampling,
+            window=self.cfg.window, scan_pages=dist.scan_pages, seed=seed)
 
-        self.params: Dict[str, Any] = G.init_params(
-            cfg, jax.random.PRNGKey(seed))
-        self.memory = TGNMemory(cfg, self.store) if cfg.use_memory \
-            else None
-        self.events = EventLog()
-        self.builder = BatchBuilder(
-            cfg, stream, fetch_node=self._fetch_node,
-            fetch_edge=self._fetch_edge,
-            edge_feat_fn=self.store.get_edge_features,
-            memory=self.memory, rng=np.random.default_rng(seed))
-
-        self.optimizer: Optimizer = adamw(lr, weight_decay=0.0)
-        self.opt_state = self.optimizer.init(self.params)
+    def _init_dist_state(self) -> None:
+        dist = self.dist
+        W = dist.n_workers
         # per-worker error-feedback residual, only for the lossy
         # collectives (an empty pytree otherwise — the exact path would
         # carry W dead parameter copies through every step)
@@ -139,15 +131,16 @@ class DistributedContinuousTrainer:
         self.reduce_bytes_per_step = C.grad_payload_bytes(
             self.params, dist.collective, bits=dist.quant_bits,
             frac=dist.topk_frac)
-        self.history: Optional[EventStream] = None
-        self._round_robin = 0        # ragged batches rotate over workers
-        self._refresh_bytes = 0
         self._reduce_bytes = 0
-        self._build_steps()
-        self.timers = self.builder.timers
+        self._collective_steps = 0
+        # per-partition cache accounting: (node=0 | edge=1, partition)
+        Pm = dist.n_machines
+        self._part_hits = np.zeros((2, Pm), np.int64)
+        self._part_accesses = np.zeros((2, Pm), np.int64)
 
     # -- jitted steps -----------------------------------------------------
     def _build_steps(self) -> None:
+        from repro.core.continuous import make_forward
         dist = self.dist
         W, A = dist.n_workers, dist.grad_accum
         mode = dist.collective
@@ -156,31 +149,48 @@ class DistributedContinuousTrainer:
         forward = make_forward(self.cfg, self.use_pallas)
         optimizer = self.optimizer
 
-        def local_grads(params, batch):
-            """Gradients of this worker's shard. Batch leaves are the
+        def micro_grads(params, mb, scale):
+            """Gradients of `W * masked_sum / total` for one micro shard
+            (`scale` = W/total): psum over workers / scan over micros of
+            these, divided by W, is exactly the global-batch mean
+            gradient — for padded ragged tails as well as full
+            batches."""
+            def f(p):
+                loss, aux = forward(p, mb)
+                cnt = 2.0 * jnp.sum(mb["seed_mask"])  # pos + neg lanes
+                return loss * cnt * scale, (loss * cnt, aux)
+            (_, (wsum, aux)), g = jax.value_and_grad(
+                f, has_aux=True)(params)
+            return g, wsum, aux
+
+        def local_grads(params, batch, scale):
+            """This worker's gradient/loss-sum. Batch leaves are the
             plain shard when A == 1, or (A, ...) micro-stacks."""
             if A == 1:
-                (loss, aux), g = jax.value_and_grad(
-                    forward, has_aux=True)(params, batch)
-                return g, loss, aux
+                g, wsum, (scores, labels, w) = micro_grads(
+                    params, batch, scale)
+                return g, wsum, (scores, labels, w)
 
             def one(carry, mb):
-                (loss, aux), g = jax.value_and_grad(
-                    forward, has_aux=True)(params, mb)
-                return jax.tree.map(jnp.add, carry, g), (loss, aux)
+                gc, wc = carry
+                g, wsum, aux = micro_grads(params, mb, scale)
+                return (jax.tree.map(jnp.add, gc, g), wc + wsum), aux
 
             zero = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            gsum, (losses, (scores, labels)) = lax.scan(one, zero, batch)
-            g = jax.tree.map(lambda x: x / A, gsum)
-            return g, losses.mean(), (scores.reshape(-1),
-                                      labels.reshape(-1))
+            (gsum, wsum), (scores, labels, w) = lax.scan(
+                one, (zero, jnp.zeros(())), batch)
+            return gsum, wsum, (scores.reshape(-1), labels.reshape(-1),
+                                w.reshape(-1))
 
         def train_shard(params, batch, err):
             # under shard_map: leaves carry a leading length-1 device dim
             batch = _unstack(batch)
             err = _unstack(err)
-            g, loss, (scores, labels) = local_grads(params, batch)
+            cnt = 2.0 * jnp.sum(batch["seed_mask"])   # over micros too
+            total = jnp.maximum(lax.psum(cnt, "dp"), 1.0)
+            g, wsum, (scores, labels, w) = local_grads(
+                params, batch, W / total)
             if mode == "bucketed":
                 red = C.bucketed_psum(g, "dp",
                                       bucket_bytes=dist.bucket_bytes)
@@ -192,14 +202,14 @@ class DistributedContinuousTrainer:
                 red, new_err = C.topk_psum_grads(
                     g, err, "dp", frac=dist.topk_frac)
             grads = jax.tree.map(lambda x: x / W, red)
-            loss = lax.psum(loss, "dp") / W
+            loss = lax.psum(wsum, "dp") / total
             new_err = jax.tree.map(lambda x: x[None], new_err)
-            return grads, loss, (scores, labels), new_err
+            return grads, loss, (scores, labels, w), new_err
 
         smap_train = shard_map(
             train_shard, mesh=self.mesh,
             in_specs=(P(), P("dp"), P("dp")),
-            out_specs=(P(), P(), (P("dp"), P("dp")), P("dp")),
+            out_specs=(P(), P(), (P("dp"), P("dp"), P("dp")), P("dp")),
             check_vma=False)
 
         def dist_step(params, opt_state, batch, err):
@@ -209,36 +219,49 @@ class DistributedContinuousTrainer:
             return new_params, new_opt, loss, aux, new_err
 
         def eval_shard(params, batch):
-            loss, (scores, labels) = forward(params, _unstack(batch))
-            return lax.psum(loss, "dp") / W, scores, labels
+            loss, (scores, labels, w) = forward(params, _unstack(batch))
+            cnt = 2.0 * jnp.sum(_unstack(batch)["seed_mask"])
+            total = jnp.maximum(lax.psum(cnt, "dp"), 1.0)
+            return lax.psum(loss * cnt, "dp") / total, scores, labels, w
 
         smap_eval = shard_map(
             eval_shard, mesh=self.mesh,
             in_specs=(P(), P("dp")),
-            out_specs=(P(), P("dp"), P("dp")),
+            out_specs=(P(), P("dp"), P("dp"), P("dp")),
             check_vma=False)
-
-        # ragged fallback: one replicated worker, plain single-host step
-        def single_step(params, opt_state, batch):
-            (loss, aux), grads = jax.value_and_grad(
-                forward, has_aux=True)(params, batch)
-            new_params, new_opt = optimizer.update(grads, opt_state,
-                                                   params)
-            return new_params, new_opt, loss, aux
 
         self._dist_step = jax.jit(dist_step)
         self._dist_eval = jax.jit(smap_eval)
-        self._single_step = jax.jit(single_step)
-        self._single_eval = jax.jit(forward)
 
     # -- feature fetch (device cache in front of the sharded store) -------
     def _fetch_node(self, ids):
-        return self.node_cache.fetch(
+        out = self.node_cache.fetch(
             ids, lambda miss: self.store.get_node_features(miss))
+        self._account_cache(0, ids, self.node_cache.last_hit)
+        return out
 
     def _fetch_edge(self, eids):
-        return self.edge_cache.fetch(
+        out = self.edge_cache.fetch(
             eids, lambda miss: self.store.get_edge_features(miss))
+        self._account_cache(1, eids, self.edge_cache.last_hit)
+        return out
+
+    def _account_cache(self, kind: int, ids, hit: np.ndarray) -> None:
+        """Per-partition hit accounting: cache traffic bucketed by the
+        owner machine that a miss would have had to RPC to."""
+        ids = np.asarray(ids, np.int64)
+        valid = ids >= 0
+        if not valid.any():
+            return
+        own = owner_of(ids[valid], self.dist.n_machines)
+        np.add.at(self._part_accesses[kind], own, 1)
+        np.add.at(self._part_hits[kind], own,
+                  np.asarray(hit)[valid].astype(np.int64))
+
+    def hit_rate_per_partition(self, kind: str) -> Tuple[float, ...]:
+        k = 0 if kind == "node" else 1
+        acc = np.maximum(self._part_accesses[k], 1)
+        return tuple((self._part_hits[k] / acc).round(4).tolist())
 
     # -- sampling routes ---------------------------------------------------
     def _sample_fn(self, worker: int):
@@ -247,46 +270,90 @@ class DistributedContinuousTrainer:
             m, r, np.asarray(seeds, np.int64),
             np.asarray(ts, np.float32))
 
-    # -- batch building ----------------------------------------------------
-    def _shard_batches(self, src, dst, ts, *, micros: int):
-        """Stacked (W[, A], ...) device batch for one global batch: each
-        worker's shard is sampled through the static schedule from that
-        worker's (machine, rank) perspective, then stacked along the dp
-        axis. The negatives are drawn ONCE for the global batch (same
-        RNG consumption as the single-host trainer)."""
+    # -- sharded batch staging ---------------------------------------------
+    def _stage_shards(self, src, dst, ts, *, micros: int
+                      ) -> Dict[str, Any]:
+        """Prefetch the stacked (W[, A], ...) device batch for one
+        global batch: each worker's shard is sampled through the static
+        schedule from that worker's (machine, rank) perspective.  The
+        negatives are drawn ONCE for the global batch (same RNG
+        consumption as the single-host trainer).  Batches that do not
+        split evenly are padded per shard (pow2 lanes, loss-masked) so
+        EVERY step takes the shard_map collective path."""
         W = self.dist.n_workers
         n = len(src)
         neg = self.builder.negatives(n)
-        s = n // (W * micros)
-        shards = []
+        chunks = W * micros
+        s = -(-n // chunks)                     # ceil
+        if n % chunks:
+            # ragged: pow2 shard so the tail's compilation is reused
+            s = max(1, 1 << (s - 1).bit_length()) if s > 1 else 1
+        stageds: List[List[Dict[str, Any]]] = []
         for w in range(W):
             fn = self._sample_fn(w)
             parts = []
             for a in range(micros):
-                lo = (w * micros + a) * s
-                hi = lo + s
-                seeds = np.concatenate(
-                    [src[lo:hi], dst[lo:hi], neg[lo:hi]]).astype(np.int64)
-                seed_ts = np.concatenate([ts[lo:hi]] * 3).astype(
-                    np.float32)
-                parts.append(self.builder.build(seeds, seed_ts, fn))
-            if micros == 1:
-                shards.append(parts[0])
-            else:
-                shards.append(jax.tree.map(
-                    lambda *xs: jnp.stack(xs), *parts))
+                i = w * micros + a
+                lo, hi = min(i * s, n), min(i * s + s, n)
+                v = hi - lo
+                sc, dc, nc, tc = (
+                    np.asarray(src[lo:hi]), np.asarray(dst[lo:hi]),
+                    np.asarray(neg[lo:hi]), np.asarray(ts[lo:hi]))
+                if v < s:
+                    # pad with the batch's last real event (valid ids)
+                    sc, dc, nc, tc = (
+                        np.concatenate([x, np.full(s - v, fill, x.dtype)])
+                        for x, fill in ((sc, src[n - 1]), (dc, dst[n - 1]),
+                                        (nc, neg[n - 1]), (tc, ts[n - 1])))
+                mask = np.zeros(s, np.float32)
+                mask[:v] = 1.0
+                seeds = np.concatenate([sc, dc, nc]).astype(np.int64)
+                seed_ts = np.concatenate([tc, tc, tc]).astype(np.float32)
+                parts.append(self.assembler.prefetch(seeds, seed_ts, fn,
+                                                     mask))
+            stageds.append(parts)
+        if not self.assembler.needs_finalize:
+            # memory-less models: batches are complete — stack during
+            # prefetch so the host work overlaps the in-flight step
+            return {"batch": self._stack(stageds), "parts": None}
+        return {"batch": None, "parts": stageds}
+
+    def _stack(self, stageds):
+        shards = []
+        for parts in stageds:
+            done = [self.assembler.finalize(p) for p in parts]
+            shards.append(done[0] if len(done) == 1 else jax.tree.map(
+                lambda *xs: jnp.stack(xs), *done))
         return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
 
-    def _global_batch(self, src, dst, ts):
-        """Ragged fallback: the full batch, sampled via one worker in
-        round-robin (replicated step — identical math to single-host)."""
-        n = len(src)
-        neg = self.builder.negatives(n)
-        seeds = np.concatenate([src, dst, neg]).astype(np.int64)
-        seed_ts = np.concatenate([ts, ts, ts]).astype(np.float32)
-        fn = self._sample_fn(self._round_robin % self.dist.n_workers)
-        self._round_robin += 1
-        return self.builder.build(seeds, seed_ts, fn)
+    def _sharded_batch(self, staged):
+        return staged["batch"] if staged["batch"] is not None \
+            else self._stack(staged["parts"])
+
+    # -- pipeline stage overrides ------------------------------------------
+    def _stage_train(self, item) -> Dict[str, Any]:
+        src, dst, ts, _ = item
+        return self._stage_shards(src, dst, ts,
+                                  micros=self.dist.grad_accum)
+
+    def _stage_eval(self, item) -> Dict[str, Any]:
+        src, dst, ts, _ = item
+        return self._stage_shards(src, dst, ts, micros=1)
+
+    def _launch_train(self, item, staged):
+        batch = self._sharded_batch(staged)
+        t0 = time.perf_counter()
+        (self.params, self.opt_state, loss, _,
+         self.err) = self._dist_step(
+            self.params, self.opt_state, batch, self.err)
+        self.timers["step"] += time.perf_counter() - t0
+        self._reduce_bytes += self.reduce_bytes_per_step
+        self._collective_steps += 1
+        return loss
+
+    def _launch_eval(self, item, staged):
+        batch = self._sharded_batch(staged)
+        return self._dist_eval(self.params, batch)
 
     # -- public API --------------------------------------------------------
     def ingest(self, batch: EventStream) -> float:
@@ -300,72 +367,17 @@ class DistributedContinuousTrainer:
         self.timers["ingest"] += dt
         return dt
 
-    def evaluate(self, events: EventStream) -> Dict[str, float]:
-        W = self.dist.n_workers
-
-        def step(src, dst, ts):
-            if len(src) % W == 0:
-                batch = self._shard_batches(src, dst, ts, micros=1)
-                return self._dist_eval(self.params, batch)
-            batch = self._global_batch(src, dst, ts)
-            loss, (scores, labels) = self._single_eval(self.params,
-                                                       batch)
-            return loss, scores, labels
-
-        return eval_metrics(events, self.cfg.batch_size, step)
-
-    def train_round(self, new_events: EventStream, *, epochs: int = 3,
-                    replay_ratio: float = 0.0) -> DistRoundMetrics:
-        """Paper §3 loop, distributed: evaluate-then-finetune with the
-        global batch sharded over P*G workers per optimizer step."""
-        for k in self.timers:
-            self.timers[k] = 0.0
-        self._refresh_bytes = 0
+    # -- round bookkeeping -------------------------------------------------
+    def _reset_round_stats(self) -> None:
+        super()._reset_round_stats()
         self._reduce_bytes = 0
+        self._collective_steps = 0
         self.samplers.reset_stats()
-        d0 = self.dispatcher.bytes_dispatched
-        self.node_cache.reset_stats()
-        self.edge_cache.reset_stats()
-        W, A = self.dist.n_workers, self.dist.grad_accum
+        self._dispatch_base = self.dispatcher.bytes_dispatched
+        self._part_hits[:] = 0
+        self._part_accesses[:] = 0
 
-        ev = self.evaluate(new_events)          # test-then-train
-        self.ingest(new_events)
-
-        train_set = replay_mix(new_events, self.history, replay_ratio,
-                               self.builder.rng)
-        self.node_cache.snapshot_round()
-        self.edge_cache.snapshot_round()
-        last_loss = 0.0
-        t0 = time.perf_counter()
-        for ep in range(epochs):
-            self.node_cache.restore_epoch()
-            self.edge_cache.restore_epoch()
-            for src, dst, ts, _ in chronological_batches(
-                    train_set, self.cfg.batch_size):
-                if len(src) % (W * A) == 0:
-                    batch = self._shard_batches(src, dst, ts, micros=A)
-                    tt = time.perf_counter()
-                    (self.params, self.opt_state, loss, _,
-                     self.err) = self._dist_step(
-                        self.params, self.opt_state, batch, self.err)
-                    self._reduce_bytes += self.reduce_bytes_per_step
-                else:
-                    batch = self._global_batch(src, dst, ts)
-                    tt = time.perf_counter()
-                    self.params, self.opt_state, loss, _ = \
-                        self._single_step(self.params, self.opt_state,
-                                          batch)
-                self.timers["train"] += time.perf_counter() - tt
-                last_loss = float(loss)
-                if self.cfg.use_memory:
-                    self.memory.commit_and_stage(
-                        self.params["memory"], src, dst, ts,
-                        self.events.eids_for(ts),
-                        self.store.get_edge_features)
-        train_s = time.perf_counter() - t0
-
-        self.history = (train_set if self.history is None
-                        else _concat_streams(self.history, new_events))
+    def _round_metrics(self, ev, last_loss, train_s) -> DistRoundMetrics:
         st = self.samplers.load_stats()
         return DistRoundMetrics(
             ap=ev["ap"], auc_like=ev["acc"], loss=last_loss,
@@ -375,11 +387,16 @@ class DistributedContinuousTrainer:
             node_hit_rate=self.node_cache.hit_rate,
             edge_hit_rate=self.edge_cache.hit_rate,
             refresh_bytes=self._refresh_bytes,
-            dispatch_bytes=self.dispatcher.bytes_dispatched - d0,
+            step_s=self.timers["step"],
+            dispatch_bytes=(self.dispatcher.bytes_dispatched
+                            - self._dispatch_base),
             request_bytes=st.request_bytes,
             response_bytes=st.response_bytes,
             reduce_bytes=self._reduce_bytes,
-            load_cv=st.cv)
+            load_cv=st.cv,
+            collective_steps=self._collective_steps,
+            node_hit_per_part=self.hit_rate_per_partition("node"),
+            edge_hit_per_part=self.hit_rate_per_partition("edge"))
 
     # -- introspection -----------------------------------------------------
     def full_upload_bytes(self) -> int:

@@ -301,9 +301,17 @@ def link_score(p: PyTree, h_u: jnp.ndarray, h_v: jnp.ndarray
     return (h @ p["w2"] + p["b2"])[..., 0]
 
 
-def bce_logits(scores: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
-    return jnp.mean(jnp.maximum(scores, 0) - scores * labels
-                    + jnp.log1p(jnp.exp(-jnp.abs(scores))))
+def bce_logits(scores: jnp.ndarray, labels: jnp.ndarray,
+               weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean BCE over logits; with `weights`, the weighted mean over
+    positive-weight lanes (padded ragged-tail lanes carry weight 0, so
+    a padded batch scores exactly its real events)."""
+    per = (jnp.maximum(scores, 0) - scores * labels
+           + jnp.log1p(jnp.exp(-jnp.abs(scores))))
+    if weights is None:
+        return jnp.mean(per)
+    w = weights.astype(per.dtype)
+    return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
 def average_precision(scores, labels) -> float:

@@ -1,6 +1,8 @@
 """Distributed continuous trainer (repro.dist.continuous): loss parity
 with the single-host ContinuousTrainer, lossy-collective error bands,
-static-schedule load balance, and delta-chained sampler refresh."""
+static-schedule load balance, delta-chained sampler refresh, and the
+padded ragged-tail path (every step runs the shard_map collective —
+there is no replicated single-worker fallback)."""
 import jax
 import numpy as np
 import pytest
@@ -18,8 +20,8 @@ needs8 = pytest.mark.skipif(len(jax.devices()) < 8,
 
 # small power-law stream shared by the parity tests; rounds are sized so
 # every global batch splits evenly over the 8 workers except round 3,
-# whose replay mix produces a ragged tail batch (exercises the
-# replicated fallback path)
+# whose replay mix produces a ragged tail batch — which pads (pow2,
+# loss-masked lanes) and STILL takes the shard_map collective path
 STREAM = synth_ctdg(n_nodes=192, n_events=1800, t_span=20_000,
                     d_node=8, d_edge=8, seed=7)
 WARM, ROUND = 512, 256
@@ -44,8 +46,11 @@ def _rounds(tr, n, *, epochs=2):
 
 @pytest.fixture(scope="module")
 def single_host():
+    # serial (overlap=False) reference: the exact pre-pipeline loop, so
+    # the parity tests pin the pipelined trainers to PR 3 numerics
     tr = ContinuousTrainer(_cfg(), STREAM, threshold=16,
-                           cache_ratio=0.2, lr=LR, seed=0)
+                           cache_ratio=0.2, lr=LR, seed=0,
+                           overlap=False)
     tr.ingest(STREAM.slice(0, WARM))
     return tr, _rounds(tr, 3)
 
@@ -71,6 +76,17 @@ def test_bucketed_psum_loss_parity(single_host):
     assert all(m.reduce_bytes > 0 for m in got)
     assert all(m.request_bytes > 0 and m.response_bytes > 0 for m in got)
     assert all(m.dispatch_bytes > 0 for m in got)
+    # EVERY optimizer step took the shard_map collective path — the
+    # replicated single-worker fallback is gone (round 3's replay mix
+    # includes a ragged tail batch, now padded + loss-masked)
+    assert not hasattr(tr, "_single_step")
+    for m in got:
+        assert m.collective_steps > 0
+        assert m.reduce_bytes == m.collective_steps * \
+            tr.reduce_bytes_per_step
+    # per-partition cache hit rates are accounted for all P partitions
+    assert len(got[-1].node_hit_per_part) == 4
+    assert len(got[-1].edge_hit_per_part) == 4
 
 
 @needs8
@@ -114,19 +130,40 @@ def test_tgn_memory_parity():
     cfg = tgn(d_node=8, d_edge=8, d_time=8, d_hidden=16, d_memory=12,
               fanouts=(4,), batch_size=64)
     s = ContinuousTrainer(cfg, STREAM, threshold=16, cache_ratio=0.2,
-                          lr=LR, seed=0)
+                          lr=LR, seed=0, overlap=False)
     s.ingest(STREAM.slice(0, WARM))
-    ref = _rounds(s, 2)
+    ref = _rounds(s, 3)
     d = DistributedContinuousTrainer(
         cfg, STREAM, DistConfig(4, 2, "bucketed"), threshold=16,
         cache_ratio=0.2, lr=LR, seed=0)
     d.ingest(STREAM.slice(0, WARM))
-    got = _rounds(d, 2)
+    got = _rounds(d, 3)
     for a, b in zip(ref, got):
         assert abs(a.loss - b.loss) <= 1e-4, (a.loss, b.loss)
     # memory actually engaged on both sides
-    active = np.unique(STREAM.src[:WARM + 2 * ROUND])
+    active = np.unique(STREAM.src[:WARM + 3 * ROUND])
     assert np.abs(d.store.get_memory(active)).sum() > 0
+
+
+@needs8
+def test_ragged_batches_all_take_collective_path():
+    """batch_size=60 never splits evenly over W=8 workers: every single
+    step runs the padded masked-loss shard_map path, and the psum of
+    per-shard masked sums still reproduces the single-host global-batch
+    loss to <= 1e-4 — the old replicated fallback is never needed."""
+    cfg = _cfg(batch_size=60)
+    s = ContinuousTrainer(cfg, STREAM, threshold=16, cache_ratio=0.2,
+                          lr=LR, seed=0, overlap=False)
+    s.ingest(STREAM.slice(0, WARM))
+    ref = _rounds(s, 2)
+    tr, got = _run_dist(cfg, "bucketed", 2)
+    for a, b in zip(ref, got):
+        assert abs(a.loss - b.loss) <= 1e-4, (a.loss, b.loss)
+        assert abs(a.ap - b.ap) <= 1e-3, (a.ap, b.ap)
+    # 256 events / 60 per batch = 5 batches x 2 epochs, all collective
+    for m in got:
+        assert m.collective_steps == 10
+        assert m.reduce_bytes == 10 * tr.reduce_bytes_per_step
 
 
 @needs8
@@ -144,6 +181,10 @@ def test_static_schedule_load_balance_cv():
     m = tr.train_round(stream.slice(2048, 3072), epochs=2)
     assert m.load_cv < 0.1, tr.samplers._load
     assert np.isfinite(m.loss)
+    # every step of the power-law stream ran the shard_map collective:
+    # 1024 events / 256 per batch x 2 epochs = 8 optimizer steps
+    assert m.collective_steps == 8
+    assert m.reduce_bytes == 8 * tr.reduce_bytes_per_step
 
 
 @needs8

@@ -150,6 +150,87 @@ def test_property_against_model(seed, policy, lam):
         assert len(model) <= cap
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["lru", "lfu", "fifo"]),
+       st.sampled_from([0.1, 0.2, 0.5]))
+def test_lambda_quota_property(seed, policy, lam):
+    """Anti-thrashing quota (§4.3): NO update may replace more than
+    ceil(lam * capacity) entries — insertions and evictions are both
+    bounded by the quota, for every policy, on arbitrary traffic."""
+    rng = np.random.default_rng(seed)
+    cap = int(rng.integers(4, 24))
+    c = FeatureCache(capacity=cap, dim=4, id_space=500, policy=policy,
+                     lam=lam)
+    R = c.max_replace
+    assert R == max(1, int(np.ceil(lam * cap)))
+    for _ in range(10):
+        before = c.contents()
+        ids = rng.integers(0, 500, int(rng.integers(1, 40)))
+        c.fetch(np.asarray(ids, np.int32), lambda m: _feat(m, 4))
+        after = c.contents()
+        assert len(after - before) <= R, (policy, lam, before, after)
+        assert len(before - after) <= R, (policy, lam, before, after)
+        assert len(after) <= cap
+
+
+@pytest.mark.parametrize("policy", ["lru", "lfu", "fifo"])
+def test_restore_epoch_bit_identical(policy):
+    """Cache restoration (§4.3): after arbitrary intra-round pollution,
+    restore_epoch() must reproduce the round snapshot BIT-identically —
+    every state array (ids, slots, scores, features, ring clock)."""
+    fields = ("slot_of", "ids", "score", "feats", "clock")
+    c = FeatureCache(capacity=8, dim=4, id_space=100, policy=policy,
+                     lam=0.5)
+    _drive(c, [[0, 1, 2, 3], [4, 5], [0, 4]], dim=4)
+    c.snapshot_round()
+    snap = {k: np.asarray(getattr(c.state, k)).copy() for k in fields}
+    rng = np.random.default_rng(3)
+    for _ in range(5):                     # pollute: evictions + hits
+        _drive(c, [rng.integers(0, 100, 9)], dim=4)
+    assert any(not np.array_equal(np.asarray(getattr(c.state, k)),
+                                  snap[k]) for k in fields)
+    c.restore_epoch()
+    for k in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(c.state, k)),
+                                      snap[k], err_msg=k)
+
+
+def test_lfu_evicts_lowest_frequency_under_quota():
+    """LFU + quota: the R replacement victims are exactly the R
+    lowest-frequency slots."""
+    c = FeatureCache(capacity=4, dim=4, id_space=100, policy="lfu",
+                     lam=0.5)                    # R = 2
+    _drive(c, [[0, 1, 2, 3]], dim=4)             # freq: all 1
+    _drive(c, [[0, 1], [0, 1], [0, 2]], dim=4)   # 0:4, 1:3, 2:2, 3:1
+    _drive(c, [[8, 9]], dim=4)                   # evicts 3 then 2
+    assert {0, 1, 8, 9} == c.contents()
+
+
+def test_fifo_pointer_advances_by_replacements_only():
+    """FIFO ring: hits do not advance the pointer; each insertion moves
+    it by exactly the number of entries replaced."""
+    c = FeatureCache(capacity=4, dim=4, id_space=100, policy="fifo",
+                     lam=0.25)                   # R = 1
+    _drive(c, [[0], [1], [2], [3]], dim=4)       # ring full, ptr -> 0
+    _drive(c, [[0, 1, 2, 3]] * 2, dim=4)         # all hits: ptr frozen
+    _drive(c, [[7]], dim=4)                      # replaces slot 0
+    assert {1, 2, 3, 7} == c.contents()
+    _drive(c, [[8]], dim=4)                      # replaces slot 1
+    assert {2, 3, 7, 8} == c.contents()
+
+
+def test_fetch_records_last_hit_mask():
+    """fetch() exposes the per-id hit mask of its latest call — the
+    distributed trainer buckets it per owner partition."""
+    c = FeatureCache(capacity=8, dim=4, id_space=100, policy="lru",
+                     lam=1.0)
+    c.fetch(np.array([1, 2, 3], np.int32), lambda m: _feat(m, 4))
+    np.testing.assert_array_equal(c.last_hit, [False, False, False])
+    c.fetch(np.array([1, 2, 9], np.int32), lambda m: _feat(m, 4))
+    np.testing.assert_array_equal(c.last_hit, [True, True, False])
+
+
 def test_pallas_cache_gather_matches_ref():
     from repro.kernels.cache_gather.ops import cache_gather_pallas
     from repro.kernels.cache_gather.ref import cache_gather_ref
