@@ -1,0 +1,127 @@
+"""Multi-process multi-host launch artifact -> BENCH_multihost.json.
+
+Spawns the REAL 2-process fleet (repro.launch.multihost: one OS process
+per machine, jax.distributed + gloo CPU collectives, RPC sampling
+servers) and reports, per worker and per round, the
+ingest / sample / fetch / train wall-time split together with the RPC
+share of sampling (client-side blocking on remote hops) and the actual
+wire bytes the sampling RPC moved — the cross-process cost surface the
+in-process bench_distributed can only model.
+
+Everything is emitted from worker 0's perspective plus a fleet summary;
+the parent also cross-checks that all workers report identical losses
+(replicated training), so the bench doubles as a cheap correctness
+canary in the nightly lane.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+# parent only spawns subprocesses — no jax import needed here.
+# Standalone runs (`python benchmarks/bench_multihost.py`) need the
+# repo root for `benchmarks.common` AND src/ for `repro.*`:
+_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.common import emit, save_json
+from repro.launch import multihost
+
+WORKER = (Path(__file__).resolve().parent.parent / "tests"
+          / "_multihost_worker.py")
+P, G = 2, 2
+
+
+def _run_cfg(smoke: bool) -> dict:
+    warm = 1_024 if smoke else 4_096
+    rnd = 512 if smoke else 2_048
+    rounds = 2 if smoke else 3
+    return {
+        "model": "tgat",
+        "model_kw": dict(d_node=16, d_edge=12, d_time=10, d_hidden=32,
+                         fanouts=(8, 4), sampling="recent",
+                         batch_size=128 if smoke else 512),
+        "stream": dict(n_nodes=4_000, n_events=warm + rounds * rnd,
+                       t_span=100_000, d_node=16, d_edge=12,
+                       alpha=2.2, seed=6),
+        "dist": {"collective": "bucketed"},
+        "trainer": dict(threshold=32, cache_ratio=0.1, lr=1e-3,
+                        seed=0, overlap=True),
+        "warm": warm, "round_size": rnd, "rounds": rounds,
+        "epochs": 2, "replay_ratio": 0.2, "replay_round": rounds - 1,
+    }
+
+
+def run() -> None:
+    smoke = os.environ.get("BENCH_QUICK", "") not in ("", "0")
+    run_cfg = _run_cfg(smoke)
+    t0 = time.time()
+    # the workers import repro.* themselves: put src/ on their path
+    # even when the parent was run standalone without PYTHONPATH
+    src = str(_ROOT / "src")
+    pp = os.environ.get("PYTHONPATH", "")
+    outs = multihost.launch(
+        [sys.executable, str(WORKER), json.dumps(run_cfg)],
+        n_processes=P, n_local_devices=G, timeout_s=1500.0,
+        extra_env={"PYTHONPATH": f"{src}:{pp}" if pp else src})
+    wall = time.time() - t0
+    results = multihost.parse_results(outs)
+
+    # replicated training: losses must agree across the fleet
+    l0 = [r["loss"] for r in results[0]["rounds"]]
+    for res in results[1:]:
+        li = [r["loss"] for r in res["rounds"]]
+        assert all(abs(a - b) <= 1e-6 for a, b in zip(l0, li)), (l0, li)
+
+    rows = []
+    for res in results:
+        pid = res["process_id"]
+        for i, m in enumerate(res["rounds"]):
+            split = {
+                "ingest_s": m["ingest_s"], "sample_s": m["sample_s"],
+                "fetch_s": m["fetch_s"], "step_s": m["step_s"],
+                "train_loop_s": m["train_s"],
+                "rpc_wait_s": m["rpc_wait_s"],
+                "rpc_calls": m["rpc_calls"],
+                "rpc_wire_bytes": m["rpc_wire_bytes"],
+                "reduce_bytes": m["reduce_bytes"],
+                "dispatch_bytes": m["dispatch_bytes"],
+                "loss": m["loss"], "ap": m["ap"],
+            }
+            rows.append({"worker": pid, "round": i, **split})
+            if pid == 0:
+                emit(f"multihost/round{i}/sample",
+                     m["sample_s"] * 1e6,
+                     f"rpc_wait={m['rpc_wait_s']:.3f}s")
+                emit(f"multihost/round{i}/train",
+                     m["train_s"] * 1e6,
+                     f"step={m['step_s']:.3f}s")
+                emit(f"multihost/round{i}/ingest",
+                     m["ingest_s"] * 1e6,
+                     f"dispatchB={m['dispatch_bytes']}")
+    total_rpc = sum(r["rpc"]["bytes_out"] + r["rpc"]["bytes_in"]
+                    for r in results)
+    emit("multihost/launch_wall", wall * 1e6,
+         f"P={P} G={G} rpc_bytes={total_rpc}")
+
+    save_json("multihost", {
+        "topology": {"processes": P, "ranks_per_process": G,
+                     "devices_per_process": G + 1,
+                     "collectives": "gloo-cpu",
+                     "transport": "multiprocessing.connection TCP"},
+        "smoke": smoke,
+        "launch_wall_s": wall,
+        "rounds": rows,
+        "rpc_totals": [r["rpc"] for r in results],
+        "losses_agree": True,
+    })
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -16,8 +16,8 @@ def main() -> None:
     from benchmarks import (bench_access_patterns, bench_block_sizing,
                             bench_cache, bench_continuous,
                             bench_distributed, bench_graph_update,
-                            bench_roofline, bench_sampling,
-                            bench_scaling)
+                            bench_multihost, bench_roofline,
+                            bench_sampling, bench_scaling)
     benches = {
         "graph_update": bench_graph_update.run,      # Tab.2 / Fig.8
         "block_sizing": bench_block_sizing.run,      # Tab.6 / Fig.12
@@ -26,6 +26,7 @@ def main() -> None:
         "access_patterns": bench_access_patterns.run,  # Fig.5 / Tab.4
         "continuous": bench_continuous.run,          # Fig.8/10/11
         "distributed": bench_distributed.run,        # Fig.6 / §5
+        "multihost": bench_multihost.run,            # §5 (real processes)
         "scaling": bench_scaling.run,                # Fig.15 / Tab.7
         "roofline": bench_roofline.run,              # deliverable (g)
     }

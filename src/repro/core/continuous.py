@@ -267,7 +267,7 @@ class BatchBuilder:
 class RoundMetrics:
     ap: float
     auc_like: float
-    loss: float
+    loss: float               # last finetune-step train loss
     ingest_s: float
     sample_s: float
     fetch_s: float
@@ -276,6 +276,7 @@ class RoundMetrics:
     edge_hit_rate: float
     refresh_bytes: int = 0    # H2D payload of this round's device refresh
     step_s: float = 0.0       # jit step time: dispatch + boundary sync
+    eval_loss: float = 0.0    # test-then-train loss on the new events
 
 
 class ContinuousTrainer:
@@ -313,6 +314,7 @@ class ContinuousTrainer:
         self.memory = TGNMemory(cfg, self.store) if cfg.use_memory \
             else None
         self.events = EventLog()
+        self._last_eids = np.zeros(0, np.int64)
         self.assembler = FeatureAssembler(
             cfg, fetch_node=self._fetch_node, fetch_edge=self._fetch_edge,
             edge_feat_fn=self.store.get_edge_features, memory=self.memory,
@@ -362,8 +364,9 @@ class ContinuousTrainer:
         base = self.graph.num_edges
         eids = self.graph.add_edges(batch.src, batch.dst, batch.ts)
         # event-level ids (add_edges duplicates eids for undirected)
-        self.events.append(batch.ts,
-                           base + np.arange(len(batch.src), dtype=np.int64))
+        self._last_eids = base + np.arange(len(batch.src),
+                                           dtype=np.int64)
+        self.events.append(batch.ts, self._last_eids)
         nodes = np.unique(np.concatenate([batch.src, batch.dst]))
         self.store.put_node_features(nodes, batch.node_features(nodes))
         uniq_e = np.unique(eids)
@@ -424,17 +427,25 @@ class ContinuousTrainer:
         loss, (scores, labels, w) = self._eval_step(self.params, batch)
         return loss, scores, labels, w
 
+    def _memory_params(self):
+        """TGN memory module params for the host-side commit (the
+        multihost trainer overrides this to hand back host copies of
+        its mesh-replicated params)."""
+        return self.params["memory"]
+
     def _complete_train(self, loss, item) -> float:
         """Stage boundary: block on the in-flight step, then apply its
         host side effects (TGN raw-message commit)."""
-        src, dst, ts, _ = item
+        src, dst, ts, eids = item
         t0 = time.perf_counter()
         loss = float(loss)      # block_until_ready on the whole step
         self.timers["step"] += time.perf_counter() - t0
         if self.cfg.use_memory:
+            if eids is None:    # stream without explicit ids: fall
+                eids = self.events.eids_for(ts)  # back to the ts search
             self.memory.commit_and_stage(
-                self.params["memory"], src, dst, ts,
-                self.events.eids_for(ts), self.store.get_edge_features)
+                self._memory_params(), src, dst, ts, eids,
+                self.store.get_edge_features)
         return loss
 
     # -- public API --------------------------------------------------------
@@ -467,6 +478,10 @@ class ContinuousTrainer:
 
         ev = self.evaluate(new_events)          # test-then-train
         self.ingest(new_events)
+        # attach the ingest-assigned per-event edge ids: replay_mix /
+        # chronological_batches thread them to the TGN raw-message
+        # commit, which therefore never depends on a ts->eid search
+        new_events = new_events.with_eids(self._last_eids)
 
         train_set = replay_mix(new_events, self.history, replay_ratio,
                                self.rng)
@@ -501,6 +516,7 @@ class ContinuousTrainer:
     def _round_metrics(self, ev, last_loss, train_s) -> RoundMetrics:
         return RoundMetrics(
             ap=ev["ap"], auc_like=ev["acc"], loss=last_loss,
+            eval_loss=ev["loss"],
             ingest_s=self.timers["ingest"], sample_s=self.timers["sample"],
             fetch_s=self.timers["fetch"], train_s=train_s,
             node_hit_rate=self.node_cache.hit_rate,
@@ -510,7 +526,11 @@ class ContinuousTrainer:
 
 
 def _concat_streams(a: EventStream, b: EventStream) -> EventStream:
+    eid = None
+    if a.eid is not None and b.eid is not None:
+        eid = np.concatenate([a.eid, b.eid])
     return EventStream(np.concatenate([a.src, b.src]),
                        np.concatenate([a.dst, b.dst]),
                        np.concatenate([a.ts, b.ts]), b.n_nodes, b.d_node,
-                       b.d_edge, b.bipartite, b.seed, b.n_communities)
+                       b.d_edge, b.bipartite, b.seed, b.n_communities,
+                       eid)

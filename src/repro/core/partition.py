@@ -54,18 +54,30 @@ class GraphPartition:
 
 
 class Dispatcher:
-    """Ingestion path: partition each incremental batch and forward."""
+    """Ingestion path: partition each incremental batch and forward.
+
+    ``partitions`` are the shards hosted in this process; ``n_parts``
+    names the GLOBAL partition count when they differ (a multihost
+    worker hosts exactly one shard but must split batches over all P
+    owners — remote sub-batches are byte-accounted and dropped, their
+    owner process applies them from its own copy of the stream).  Edge
+    ids are assigned deterministically from the batch order, so every
+    process derives the same global ids without coordination."""
 
     def __init__(self, partitions: Sequence[GraphPartition],
-                 undirected: bool = False):
+                 undirected: bool = False,
+                 n_parts: Optional[int] = None):
         self.partitions = list(partitions)
+        self._local = {p.part_id: p for p in self.partitions}
+        self._n_parts = (n_parts if n_parts is not None
+                         else len(self.partitions))
         self.undirected = undirected
         self.bytes_dispatched = 0
         self._next_eid = 0
 
     @property
     def n_parts(self) -> int:
-        return len(self.partitions)
+        return self._n_parts
 
     def add_edges(self, src, dst, ts) -> np.ndarray:
         src = np.asarray(src, np.int64)
@@ -94,9 +106,26 @@ class Dispatcher:
                 continue
             # 8B src + 8B dst + 8B ts + 8B eid per event on the wire
             self.bytes_dispatched += int(sel.sum()) * 32
-            self.partitions[p].add_edges(s_all[sel], d_all[sel],
+            if p in self._local:
+                self._local[p].add_edges(s_all[sel], d_all[sel],
                                          t_all[sel], e_all[sel])
         return eids
+
+    def delete_edges(self, eids) -> int:
+        """Route edge deletions to the owner shards.  Owners are not
+        derivable from an eid alone, so the deletion set is broadcast
+        (paper-style tombstone fan-out, byte-accounted per shard) and
+        each hosted partition invalidates the ids it actually stores.
+        Returns the number of local arena rows invalidated."""
+        eids = np.asarray(list(eids) if not isinstance(eids, np.ndarray)
+                          else eids, np.int64)
+        if not len(eids):
+            return 0
+        self.bytes_dispatched += int(len(eids)) * 8 * self.n_parts
+        removed = 0
+        for part in self.partitions:
+            removed += part.graph.delete_edges(eids)
+        return removed
 
     def ingest(self, events, store=None) -> np.ndarray:
         """One continuous-learning ingest step: dispatch the event

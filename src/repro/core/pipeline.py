@@ -160,14 +160,29 @@ class PipelineEngine:
             launch: Callable, complete: Callable) -> List[Any]:
         results: List[Any] = []
         inflight = None
-        for item in items:
-            if not self.overlap and inflight is not None:
-                results.append(complete(*inflight))
-                inflight = None
-            staged = prefetch(item)        # overlaps the in-flight step
-            if inflight is not None:       # stage boundary: sync t
-                results.append(complete(*inflight))
-            inflight = (launch(item, staged), item)
+        try:
+            for item in items:
+                if not self.overlap and inflight is not None:
+                    pending, inflight = inflight, None
+                    results.append(complete(*pending))
+                staged = prefetch(item)    # overlaps the in-flight step
+                if inflight is not None:   # stage boundary: sync t
+                    pending, inflight = inflight, None
+                    results.append(complete(*pending))
+                inflight = (launch(item, staged), item)
+        except BaseException:
+            # a stage raised mid-round: drain the in-flight step first
+            # (its optimizer update already dispatched — completing it
+            # applies the host side effects, e.g. the TGN raw-message
+            # commit, so the trainer is left in a resumable state),
+            # then surface the ORIGINAL exception — no hang, no
+            # silently dropped batch.
+            if inflight is not None:
+                try:
+                    complete(*inflight)
+                except Exception:
+                    pass               # the first failure wins
+            raise
         if inflight is not None:           # drain (epoch boundary)
             results.append(complete(*inflight))
         return results

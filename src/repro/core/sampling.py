@@ -33,6 +33,7 @@ block sizing a hub node's page holds ``tau`` edges, so 16 pages cover
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 from typing import List, Optional, Sequence, Tuple
@@ -277,7 +278,7 @@ class TemporalSampler:
     def __init__(self, g_or_snap, fanouts: Sequence[int],
                  policy: str = "recent", window: float = 0.0,
                  scan_pages: int = 16, use_pallas: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, device=None):
         if isinstance(g_or_snap, DynamicGraph):
             self.snap = build_snapshot(g_or_snap)
         else:
@@ -288,6 +289,15 @@ class TemporalSampler:
         self.window = float(window)
         self.scan_pages = int(scan_pages)
         self.use_pallas = use_pallas
+        # optional device pin for the mirror + all sampling dispatches.
+        # The multihost launch serves this sampler to REMOTE trainers
+        # from an RPC thread while the local trainer's shard_map step
+        # may be blocked in a cross-process collective on the mesh
+        # devices; pinning sampling to a spare device keeps served hops
+        # from queueing behind that blocked collective (a head-of-line
+        # deadlock: the peer can't finish staging without our sampler,
+        # and our collective can't finish without the peer's step).
+        self.device = device
         self._key = jax.random.PRNGKey(seed)
         self._dev = None          # persistent device mirror of the snapshot
         self._dev_version = -1    # snapshot version the mirror reflects
@@ -299,12 +309,19 @@ class TemporalSampler:
         self.last_refresh_bytes = 0   # H2D payload of the last sync
         self.total_refresh_bytes = 0
 
+    def _on_device(self):
+        """Placement scope for mirror uploads + sampling dispatches."""
+        return (jax.default_device(self.device)
+                if self.device is not None
+                else contextlib.nullcontext())
+
     def refresh(self, snap: GraphSnapshot) -> None:
         """Adopt a refreshed snapshot and sync the device mirror (delta
         scatter when the snapshot's delta chains from our version; full
         upload otherwise)."""
         self.snap = snap
-        self._sync_device()
+        with self._on_device():
+            self._sync_device()
 
     # -- device mirror maintenance ------------------------------------
     def _table_cols(self) -> int:
@@ -423,18 +440,20 @@ class TemporalSampler:
 
     def sample_hop(self, targets, times, tmask, k: int):
         """One hop for (padded) targets; returns (nbr, eid, ts, mask)."""
-        targets = jnp.asarray(targets, jnp.int32)
-        times = jnp.asarray(times, jnp.float32)
-        tmask = jnp.asarray(tmask, bool)
-        [(_, _, _, nbr, eid, ts, m)] = self._dispatch(
-            targets, times, tmask, fanouts=(int(k),))
+        with self._on_device():
+            targets = jnp.asarray(targets, jnp.int32)
+            times = jnp.asarray(times, jnp.float32)
+            tmask = jnp.asarray(tmask, bool)
+            [(_, _, _, nbr, eid, ts, m)] = self._dispatch(
+                targets, times, tmask, fanouts=(int(k),))
         return nbr, eid, ts, m
 
     def sample(self, seeds, seed_ts) -> List[SampledLayer]:
         """k-hop sampling in ONE jitted dispatch; returns one
         SampledLayer per fanout entry."""
-        targets = jnp.asarray(seeds, jnp.int32)
-        times = jnp.asarray(seed_ts, jnp.float32)
-        tmask = jnp.ones(targets.shape, bool)
-        return [SampledLayer(*h)
-                for h in self._dispatch(targets, times, tmask)]
+        with self._on_device():
+            targets = jnp.asarray(seeds, jnp.int32)
+            times = jnp.asarray(seed_ts, jnp.float32)
+            tmask = jnp.ones(targets.shape, bool)
+            return [SampledLayer(*h)
+                    for h in self._dispatch(targets, times, tmask)]

@@ -6,13 +6,20 @@ local rank r on m'. Every (machine, rank) pair therefore serves exactly
 one requester per remote machine per step — deterministic, coordination-
 free load balance (the paper measures CV < 0.06 across workers).
 
-In-container, machines are simulated partition objects and "RPC" is an
-in-process call with byte/latency accounting (DESIGN.md §2, §7); the
-schedule, routing and measured balance are the real artifacts.
+WHERE machine m' lives is a transport concern
+(``repro.dist.transport``): by default every machine is hosted in this
+process and a remote hop is a direct in-process call with byte/latency
+accounting; under ``repro.launch.multihost`` each OS process hosts ONE
+machine's partition + samplers, serves them to its peers over an RPC
+sampling server, and routes hops whose owner is remote through
+``transport.sample_hop``.  The schedule, the routing and the measured
+balance are identical either way — only the wire is real in the second
+case.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,28 +43,46 @@ class SamplingLoadStats:
 
 
 class DistributedSamplerSystem:
-    """P machines x G gpus; per-machine graph shard + per-rank samplers."""
+    """P machines x G gpus; per-machine graph shard + per-rank samplers.
+
+    ``partitions`` are the machines hosted IN THIS PROCESS — all P of
+    them in the in-process mode, exactly one in a multihost worker
+    (``n_machines`` then names the global machine count and
+    ``transport`` carries hops to the other processes' servers).
+    Sampler seeds derive from the GLOBAL machine id, so a worker hosting
+    only machine m builds bit-identical samplers to the in-process
+    system's machine m.
+    """
 
     def __init__(self, partitions: Sequence[GraphPartition], n_gpus: int,
                  fanouts: Sequence[int], policy: str = "recent",
-                 window: float = 0.0, scan_pages: int = 16, seed: int = 0):
+                 window: float = 0.0, scan_pages: int = 16, seed: int = 0,
+                 n_machines: Optional[int] = None, transport=None,
+                 sample_device=None):
         self.partitions = list(partitions)
-        self.n_machines = len(partitions)
+        self.n_machines = (n_machines if n_machines is not None
+                           else len(partitions))
         self.n_gpus = n_gpus
         self.fanouts = tuple(fanouts)
-        # one snapshot per machine, one sampler per (machine, rank):
-        # ranks share the machine snapshot object so refresh() can chain
-        # SnapshotDeltas into every rank's device mirror
-        self.snaps: List[GraphSnapshot] = []
-        self.samplers: List[List[TemporalSampler]] = []
-        for m, part in enumerate(self.partitions):
+        self.transport = transport
+        # one snapshot per hosted machine, one sampler per (machine,
+        # rank): ranks share the machine snapshot object so refresh()
+        # can chain SnapshotDeltas into every rank's device mirror.
+        # Keyed by GLOBAL machine id (== list index when hosting all).
+        self.snaps: Dict[int, GraphSnapshot] = {}
+        self.samplers: Dict[int, List[TemporalSampler]] = {}
+        self._locks: Dict[int, List[threading.Lock]] = {}
+        for part in self.partitions:
+            m = part.part_id
             snap = build_snapshot(part.graph)
-            self.snaps.append(snap)
-            self.samplers.append([
+            self.snaps[m] = snap
+            self.samplers[m] = [
                 TemporalSampler(snap, fanouts, policy=policy,
                                 window=window, scan_pages=scan_pages,
-                                seed=seed * 1000 + m * 10 + r)
-                for r in range(n_gpus)])
+                                seed=seed * 1000 + m * 10 + r,
+                                device=sample_device)
+                for r in range(n_gpus)]
+            self._locks[m] = [threading.Lock() for _ in range(n_gpus)]
         self._load = np.zeros((self.n_machines, n_gpus), np.int64)
         self.request_bytes = 0
         self.response_bytes = 0
@@ -67,23 +92,42 @@ class DistributedSamplerSystem:
     def refresh(self) -> int:
         """Publish per-partition SnapshotDeltas to every rank sampler.
 
-        Each partition keeps ONE chained snapshot: ``refresh_snapshot``
-        mutates it in place and records the delta, and every rank
-        sampler mirrors the delta onto its device buffers via
-        ``TemporalSampler.refresh`` — O(changed cells) H2D per refresh
-        instead of the former from-scratch ``build_snapshot`` (O(graph)
-        re-upload per rank). Version gaps / tau rebuilds fall back to a
-        full upload inside the sampler (the PR 2 delta protocol).
-        Returns the H2D bytes this refresh moved across all ranks."""
+        Each hosted partition keeps ONE chained snapshot:
+        ``refresh_snapshot`` mutates it in place and records the delta,
+        and every rank sampler mirrors the delta onto its device
+        buffers via ``TemporalSampler.refresh`` — O(changed cells) H2D
+        per refresh instead of a from-scratch ``build_snapshot``
+        (O(graph) re-upload per rank). Version gaps / tau rebuilds fall
+        back to a full upload inside the sampler (the PR 2 delta
+        protocol). Returns the H2D bytes this refresh moved across all
+        hosted ranks (in a multihost worker: this machine's ranks)."""
         total = 0
-        for m, part in enumerate(self.partitions):
+        for part in self.partitions:
+            m = part.part_id
             self.snaps[m] = refresh_snapshot(part.graph, self.snaps[m])
-            for s in self.samplers[m]:
-                s.refresh(self.snaps[m])
+            for r, s in enumerate(self.samplers[m]):
+                with self._locks[m][r]:
+                    s.refresh(self.snaps[m])
                 total += s.last_refresh_bytes
         self.last_refresh_bytes = total
         self.total_refresh_bytes += total
         return total
+
+    # -- hop service (local call or RPC server entry) ----------------------
+    def serve_hop(self, machine: int, rank: int, targets: np.ndarray,
+                  times: np.ndarray, pmask: np.ndarray, k: int
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                             np.ndarray]:
+        """One (already pow2-padded) hop on a hosted sampler.  Called
+        directly for locally-owned targets and by the RPC sampling
+        server on behalf of remote trainers; the per-sampler lock keeps
+        the trainer loop and server threads from interleaving on one
+        sampler's device mirror."""
+        worker = self.samplers[machine][rank]
+        with self._locks[machine][rank]:
+            a, b, c, d = worker.sample_hop(targets, times, pmask, k)
+        return (np.asarray(a), np.asarray(b), np.asarray(c),
+                np.asarray(d))
 
     def _route_hop(self, trainer_machine: int, rank: int,
                    targets: np.ndarray, times: np.ndarray,
@@ -101,7 +145,6 @@ class DistributedSamplerSystem:
             if not n_sel:
                 continue
             # static schedule: remote requests go to the same local rank
-            worker = self.samplers[m][rank]
             self._load[m, rank] += n_sel
             if m != trainer_machine:
                 self.request_bytes += n_sel * 12   # (id, ts)
@@ -114,8 +157,12 @@ class DistributedSamplerSystem:
                 [idx, np.full(bucket - n_sel, idx[0], idx.dtype)])
             pmask = np.zeros(bucket, bool)
             pmask[:n_sel] = True
-            a, b, c, d = worker.sample_hop(targets[idx_p], times[idx_p],
-                                           pmask, k)
+            if m in self.samplers:
+                a, b, c, d = self.serve_hop(m, rank, targets[idx_p],
+                                            times[idx_p], pmask, k)
+            else:
+                a, b, c, d = self.transport.sample_hop(
+                    m, rank, targets[idx_p], times[idx_p], pmask, k)
             nbr[idx] = np.asarray(a)[:n_sel]
             eid[idx] = np.asarray(b)[:n_sel]
             ts[idx] = np.asarray(c)[:n_sel]

@@ -33,15 +33,28 @@ class EventStream:
     bipartite: bool = False
     seed: int = 0
     n_communities: int = 1
+    # per-event edge ids, attached by the trainers after ingest assigns
+    # them.  Explicit ids survive replay thinning and timestamp ties —
+    # the ts->eid search they replace mapped tied timestamps that
+    # straddle a batch boundary to the FIRST tied event's id, feeding
+    # wrong edge features into TGN raw messages.  None until ingest.
+    eid: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return len(self.src)
+
+    def with_eids(self, eids: np.ndarray) -> "EventStream":
+        """Same events, with their ingest-assigned edge ids attached."""
+        assert len(eids) == len(self.src), (len(eids), len(self.src))
+        return dataclasses.replace(
+            self, eid=np.asarray(eids, np.int64))
 
     def slice(self, lo: int, hi: int) -> "EventStream":
         return EventStream(self.src[lo:hi], self.dst[lo:hi],
                            self.ts[lo:hi], self.n_nodes, self.d_node,
                            self.d_edge, self.bipartite, self.seed,
-                           self.n_communities)
+                           self.n_communities,
+                           None if self.eid is None else self.eid[lo:hi])
 
     # deterministic feature generators (id -> vector), usable per shard
     def node_features(self, ids: np.ndarray) -> np.ndarray:

@@ -38,9 +38,22 @@ reproducing the single-host ``ContinuousTrainer`` step for step with
 the exact collective (tests assert ≤ 1e-4 loss parity over multiple
 rounds); the lossy collectives track it within an error-feedback band.
 
-Machines are in-process objects and "RPC" is byte-accounted in-process
-calls (DESIGN.md §2); the schedule, the delta protocol, the collective
-schedules and the measured balance are the real artifacts.
+The machine topology is a *transport* concern
+(``repro.dist.transport``): with the default ``LocalTransport`` every
+machine is an in-process object and "RPC" is byte-accounted in-process
+calls (DESIGN.md §2) — the degenerate 1-process case.  Injecting an
+``RpcTransport`` (as ``repro.launch.multihost`` does) turns the same
+trainer into one machine of a REAL multi-process launch: this process
+hosts one graph partition + its rank samplers, serves them to peers
+over an RPC sampling server, fetches remote hops over the wire, and
+the shard_map collectives run across processes on the global
+``jax.distributed`` mesh (gloo CPU collectives in-container).  Graph
+state is genuinely partitioned; features and TGN memories are
+replicated per process at this scale (each process derives identical
+replicas from the deterministic ingest + the replicated step), which
+keeps the numerics bit-comparable to the in-process run.  Ingest is
+bracketed by coordination-service barriers: remote samplers read the
+partition state it mutates.
 """
 from __future__ import annotations
 
@@ -52,7 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.tgn_gdelt import DistConfig, GNNConfig
 from repro.core.continuous import ContinuousTrainer, RoundMetrics
@@ -61,18 +74,24 @@ from repro.core.scheduler import DistributedSamplerSystem
 from repro.data.events import EventStream
 from repro.dist import collectives as C
 from repro.dist.sharding import shard_map
+from repro.dist.transport import LocalTransport, SamplingTransport
 
 
 @dataclasses.dataclass
 class DistRoundMetrics(RoundMetrics):
     dispatch_bytes: int = 0     # ingest RPC payload (owner dispatch)
-    request_bytes: int = 0      # sampling RPC request payload
-    response_bytes: int = 0     # sampling RPC response payload
+    request_bytes: int = 0      # sampling RPC request payload (modeled)
+    response_bytes: int = 0     # sampling RPC response payload (modeled)
     reduce_bytes: int = 0       # per-worker gradient wire payload
     load_cv: float = 0.0        # worker-load CV of the static schedule
     collective_steps: int = 0   # optimizer steps (ALL via shard_map)
     node_hit_per_part: Tuple[float, ...] = ()
     edge_hit_per_part: Tuple[float, ...] = ()
+    # real cross-process RPC traffic (zero for the in-process mode,
+    # whose request/response bytes above are the modeled payloads)
+    rpc_calls: int = 0
+    rpc_wire_bytes: int = 0     # pickled request+response bytes
+    rpc_wait_s: float = 0.0     # client-side blocking on remote hops
 
 
 def _unstack(tree):
@@ -92,8 +111,12 @@ class DistributedContinuousTrainer(ContinuousTrainer):
                  threshold: int = 64, cache_ratio: float = 0.03,
                  cache_policy: str = "lru", lam: float = 0.2,
                  use_pallas: bool = False, lr: float = 1e-3,
-                 seed: int = 0, overlap: bool = True):
+                 seed: int = 0, overlap: bool = True,
+                 transport: Optional[SamplingTransport] = None):
         self.dist = dist if dist is not None else DistConfig()
+        self.transport = transport if transport is not None \
+            else LocalTransport()
+        self.multihost = self.transport.n_processes > 1
         super().__init__(cfg, stream, threshold=threshold,
                          cache_ratio=cache_ratio,
                          cache_policy=cache_policy, lam=lam,
@@ -104,30 +127,83 @@ class DistributedContinuousTrainer(ContinuousTrainer):
     def _init_sampling(self, threshold: int, seed: int) -> None:
         dist = self.dist
         W = dist.n_workers
-        devs = jax.devices()
-        if len(devs) < W:
-            raise RuntimeError(
-                f"need {W} devices for P={dist.n_machines} x "
-                f"G={dist.n_gpus}, got {len(devs)}; set XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={W}")
-        self.mesh = Mesh(np.asarray(devs[:W]), ("dp",))
+        G = dist.n_gpus
+        sample_device = None
+        if self.multihost:
+            # every process contributes G mesh devices PLUS one spare
+            # that hosts its sampler mirrors: served hops must never
+            # queue behind a peer-blocked collective on the mesh
+            # devices (head-of-line deadlock — see transport.py)
+            if len(jax.local_devices()) != G + 1:
+                raise RuntimeError(
+                    f"multihost worker {self.transport.process_id} has "
+                    f"{len(jax.local_devices())} local devices, wants "
+                    f"G+1={G + 1} (G trainer ranks + 1 sampling "
+                    f"device); set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={G + 1}")
+            taken: Dict[int, int] = {}
+            mesh_devs = []
+            for d in jax.devices():     # process-major id order
+                if taken.get(d.process_index, 0) < G:
+                    mesh_devs.append(d)
+                    taken[d.process_index] = \
+                        taken.get(d.process_index, 0) + 1
+            sample_device = jax.local_devices()[G]
+        else:
+            devs = jax.devices()
+            if len(devs) < W:
+                raise RuntimeError(
+                    f"need {W} devices for P={dist.n_machines} x "
+                    f"G={G}, got {len(devs)}; set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={W}")
+            mesh_devs = devs[:W]
+        self.mesh = Mesh(np.asarray(mesh_devs), ("dp",))
         self.n_partitions = dist.n_machines
 
+        # this process hosts every machine (in-process mode) or exactly
+        # its own (one machine per process under repro.launch.multihost)
+        local = self.transport.local_machines(dist.n_machines)
         parts = [GraphPartition(p, dist.n_machines, threshold=threshold)
-                 for p in range(dist.n_machines)]
-        self.dispatcher = Dispatcher(parts, undirected=True)
+                 for p in local]
+        self.dispatcher = Dispatcher(parts, undirected=True,
+                                     n_parts=dist.n_machines)
         self.samplers = DistributedSamplerSystem(
-            parts, dist.n_gpus, self.cfg.fanouts, policy=self.cfg.sampling,
-            window=self.cfg.window, scan_pages=dist.scan_pages, seed=seed)
+            parts, G, self.cfg.fanouts, policy=self.cfg.sampling,
+            window=self.cfg.window, scan_pages=dist.scan_pages, seed=seed,
+            n_machines=dist.n_machines, transport=self.transport,
+            sample_device=sample_device)
+        # multihost: expose the local samplers to peers, dial theirs,
+        # and only proceed once the whole fleet is serving
+        self.transport.bind(self.samplers)
+        self.transport.connect()
+        self.transport.barrier("rpc-up")
 
     def _init_dist_state(self) -> None:
         dist = self.dist
         W = dist.n_workers
+        if self.multihost:
+            # the jitted steps span processes: every input must be a
+            # global array on the distributed mesh. Params/opt state are
+            # replicated (identical on all processes — same init seed),
+            # the error-feedback residual is dp-sharded like the batch.
+            self.store.local_rank = self.transport.process_id
+            self.params = self._replicated(self.params)
+            self.opt_state = self._replicated(self.opt_state)
         # per-worker error-feedback residual, only for the lossy
         # collectives (an empty pytree otherwise — the exact path would
         # carry W dead parameter copies through every step)
-        self.err = {} if dist.collective == "bucketed" else jax.tree.map(
-            lambda p: jnp.zeros((W,) + p.shape, jnp.float32), self.params)
+        if dist.collective == "bucketed":
+            self.err = {}
+        elif self.multihost:
+            G = dist.n_gpus
+            self.err = jax.tree.map(
+                lambda p: self._dp_global(
+                    np.zeros((G,) + np.shape(p), np.float32)),
+                self.params)
+        else:
+            self.err = jax.tree.map(
+                lambda p: jnp.zeros((W,) + p.shape, jnp.float32),
+                self.params)
         self.reduce_bytes_per_step = C.grad_payload_bytes(
             self.params, dist.collective, bits=dist.quant_bits,
             frac=dist.topk_frac)
@@ -137,6 +213,47 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         Pm = dist.n_machines
         self._part_hits = np.zeros((2, Pm), np.int64)
         self._part_accesses = np.zeros((2, Pm), np.int64)
+
+    # -- multihost global-array staging ------------------------------------
+    def _replicated(self, tree):
+        """Host tree -> mesh-replicated global arrays (every local
+        device holds the full value; all processes pass identical
+        data, which the deterministic init/ingest guarantees)."""
+        sh = NamedSharding(self.mesh, P())
+        devs = self.mesh.local_devices
+
+        def one(x):
+            x = np.asarray(x)
+            return jax.make_array_from_single_device_arrays(
+                x.shape, sh, [jax.device_put(x, d) for d in devs])
+        return jax.tree.map(one, tree)
+
+    def _dp_global(self, x):
+        """Local (G, ...) host leaf -> global (W, ...) dp-sharded array:
+        local shard i lands on local device i == global worker
+        process_id * G + i (device order is process-major)."""
+        x = np.asarray(x)
+        devs = self.mesh.local_devices
+        shape = (self.dist.n_workers,) + x.shape[1:]
+        parts = [jax.device_put(x[i:i + 1], d)
+                 for i, d in enumerate(devs)]
+        return jax.make_array_from_single_device_arrays(
+            shape, NamedSharding(self.mesh, P("dp")), parts)
+
+    def _worker_ids(self) -> range:
+        """Global worker ids this process stages batches for."""
+        if not self.multihost:
+            return range(self.dist.n_workers)
+        G = self.dist.n_gpus
+        return range(self.transport.process_id * G,
+                     (self.transport.process_id + 1) * G)
+
+    def _memory_params(self):
+        # host copies for the eager TGN commit (replicated global
+        # arrays are fully addressable, so np.asarray is local)
+        if not self.multihost:
+            return self.params["memory"]
+        return jax.tree.map(np.asarray, self.params["memory"])
 
     # -- jitted steps -----------------------------------------------------
     def _build_steps(self) -> None:
@@ -222,12 +339,19 @@ class DistributedContinuousTrainer(ContinuousTrainer):
             loss, (scores, labels, w) = forward(params, _unstack(batch))
             cnt = 2.0 * jnp.sum(_unstack(batch)["seed_mask"])
             total = jnp.maximum(lax.psum(cnt, "dp"), 1.0)
-            return lax.psum(loss * cnt, "dp") / total, scores, labels, w
+            # all_gather the per-shard scores so the outputs come back
+            # REPLICATED: under a multi-process mesh every process can
+            # then read the full eval arrays locally (a P("dp") output
+            # would leave each process holding only its shard); the
+            # concatenation order equals the old sharded output's.
+            g = lambda x: lax.all_gather(x, "dp", tiled=True)
+            return (lax.psum(loss * cnt, "dp") / total,
+                    g(scores), g(labels), g(w))
 
         smap_eval = shard_map(
             eval_shard, mesh=self.mesh,
             in_specs=(P(), P("dp")),
-            out_specs=(P(), P("dp"), P("dp"), P("dp")),
+            out_specs=(P(), P(), P(), P()),
             check_vma=False)
 
         self._dist_step = jax.jit(dist_step)
@@ -282,14 +406,17 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         EVERY step takes the shard_map collective path."""
         W = self.dist.n_workers
         n = len(src)
-        neg = self.builder.negatives(n)
+        neg = self.builder.negatives(n)         # full-batch draw: the
+        # RNG stream stays in lockstep with the single-host trainer —
+        # and across multihost processes, which each stage only their
+        # own workers' shards out of the SAME global batch
         chunks = W * micros
         s = -(-n // chunks)                     # ceil
         if n % chunks:
             # ragged: pow2 shard so the tail's compilation is reused
             s = max(1, 1 << (s - 1).bit_length()) if s > 1 else 1
         stageds: List[List[Dict[str, Any]]] = []
-        for w in range(W):
+        for w in self._worker_ids():
             fn = self._sample_fn(w)
             parts = []
             for a in range(micros):
@@ -319,12 +446,22 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         return {"batch": None, "parts": stageds}
 
     def _stack(self, stageds):
+        # multihost stacks on the HOST: the global dp-sharded batch is
+        # then built with one device_put per local shard (_dp_global)
+        # instead of a throwaway device stack + D2H readback per step
+        stk = ((lambda *xs: np.stack([np.asarray(x) for x in xs]))
+               if self.multihost else (lambda *xs: jnp.stack(xs)))
         shards = []
         for parts in stageds:
             done = [self.assembler.finalize(p) for p in parts]
-            shards.append(done[0] if len(done) == 1 else jax.tree.map(
-                lambda *xs: jnp.stack(xs), *done))
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+            shards.append(done[0] if len(done) == 1
+                          else jax.tree.map(stk, *done))
+        stacked = jax.tree.map(stk, *shards)
+        if not self.multihost:
+            return stacked
+        # this process stacked its G local shards; assemble the global
+        # (W, ...) dp-sharded batch the cross-process step consumes
+        return jax.tree.map(self._dp_global, stacked)
 
     def _sharded_batch(self, staged):
         return staged["batch"] if staged["batch"] is not None \
@@ -358,11 +495,20 @@ class DistributedContinuousTrainer(ContinuousTrainer):
     # -- public API --------------------------------------------------------
     def ingest(self, batch: EventStream) -> float:
         """Dispatch the incremental batch to owner partitions + feature
-        shards, then publish per-partition deltas to all rank samplers."""
+        shards, then publish per-partition deltas to all rank samplers.
+
+        Under multihost the two barriers fence the one mutation point
+        remote samplers can observe: nobody rewrites partition state
+        while a peer still samples the old round (pre), and nobody
+        samples the new round until every peer finished writing
+        (post)."""
         t0 = time.perf_counter()
+        self.transport.barrier("pre-ingest")
         eids = self.dispatcher.ingest(batch, self.store)
         self.events.append(batch.ts, eids)
+        self._last_eids = eids
         self._refresh_bytes += self.samplers.refresh()
+        self.transport.barrier("post-ingest")
         dt = time.perf_counter() - t0
         self.timers["ingest"] += dt
         return dt
@@ -376,11 +522,20 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         self._dispatch_base = self.dispatcher.bytes_dispatched
         self._part_hits[:] = 0
         self._part_accesses[:] = 0
+        self._rpc_base = self.transport.stats()
 
     def _round_metrics(self, ev, last_loss, train_s) -> DistRoundMetrics:
         st = self.samplers.load_stats()
+        rt = self.transport.stats()
+        base = getattr(self, "_rpc_base", None) or {}
         return DistRoundMetrics(
+            rpc_calls=rt["calls"] - base.get("calls", 0),
+            rpc_wire_bytes=(rt["bytes_out"] + rt["bytes_in"]
+                            - base.get("bytes_out", 0)
+                            - base.get("bytes_in", 0)),
+            rpc_wait_s=rt["wait_s"] - base.get("wait_s", 0.0),
             ap=ev["ap"], auc_like=ev["acc"], loss=last_loss,
+            eval_loss=ev["loss"],
             ingest_s=self.timers["ingest"],
             sample_s=self.timers["sample"],
             fetch_s=self.timers["fetch"], train_s=train_s,
@@ -400,10 +555,10 @@ class DistributedContinuousTrainer(ContinuousTrainer):
 
     # -- introspection -----------------------------------------------------
     def full_upload_bytes(self) -> int:
-        """What ONE full snapshot re-upload across every rank sampler
-        would cost right now — the delta protocol's baseline."""
+        """What ONE full snapshot re-upload across every hosted rank
+        sampler would cost right now — the delta protocol's baseline."""
         total = 0
-        for m, snap in enumerate(self.samplers.snaps):
+        for snap in self.samplers.snaps.values():
             per_rank = snap.edge_data_bytes() + snap.metadata_bytes()
             total += per_rank * self.dist.n_gpus
         return total

@@ -1,0 +1,272 @@
+"""Sampling transports: in-process mirror vs cross-process RPC.
+
+GNNFlow's distributed loop routes every k-hop request to the owner
+machine's same-rank sampler (the static schedule, §4.4).  *Where* that
+sampler lives is a transport concern, injected into
+``repro.core.scheduler.DistributedSamplerSystem``:
+
+``LocalTransport``
+    The degenerate single-process case (and the default): every machine
+    is hosted in this process, hops are direct in-process calls.  This
+    is exactly the pre-multihost behavior — the trainer, the schedule
+    and the byte accounting are unchanged.
+
+``RpcTransport``
+    One OS process per machine (``repro.launch.multihost``).  Each
+    process runs an ``RpcSamplingServer`` exposing its *local* machine's
+    per-rank samplers over ``multiprocessing.connection`` (TCP on
+    loopback for the in-container launch; the protocol is
+    length-prefixed pickled tuples, so real wire bytes are counted, not
+    modeled).  A hop whose owner is remote blocks on the owner process's
+    server; the server handles requests on daemon threads, so every
+    process keeps serving its peers while its own trainer loop runs.
+
+Determinism note: the ``recent`` policy is stateless per hop, so serving
+order cannot change results — the cross-process run reproduces the
+in-process schedule bit for bit.  Stochastic policies (``uniform`` /
+``window``) advance a per-sampler RNG per call; their results depend on
+request arrival order, which is nondeterministic across processes.  The
+parity harness therefore pins ``recent`` (the paper's default for
+TGN/TGAT); per-sampler locks keep concurrent access safe either way.
+
+A ``barrier(tag)`` rounds out the interface: ingest mutates graph +
+snapshot state that remote samplers read, so the trainer brackets it
+with barriers.  The RPC transport uses the ``jax.distributed``
+coordination service (pure host-side, no device work); the local
+transport's barrier is a no-op.
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from multiprocessing.connection import Client, Listener
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+_AUTHKEY = b"repro-multihost"
+_OK, _ERR = "ok", "err"
+
+
+class SamplingTransport:
+    """Interface the scheduler routes remote hops through."""
+
+    process_id: int = 0
+    n_processes: int = 1
+
+    def local_machines(self, n_machines: int) -> Tuple[int, ...]:
+        """Machine ids hosted by THIS process (all of them by default)."""
+        return tuple(range(n_machines))
+
+    def bind(self, system) -> None:
+        """Attach the locally hosted sampler system (starts servers)."""
+
+    def connect(self) -> None:
+        """Dial every peer's sampling server (retry until up)."""
+
+    def sample_hop(self, machine: int, rank: int, targets: np.ndarray,
+                   times: np.ndarray, pmask: np.ndarray, k: int):
+        raise NotImplementedError(
+            "local transport never routes a remote hop")
+
+    def barrier(self, tag: str) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+    def stats(self) -> Dict[str, Any]:
+        return {"calls": 0, "bytes_out": 0, "bytes_in": 0, "wait_s": 0.0}
+
+
+class LocalTransport(SamplingTransport):
+    """Everything in-process: the 1-process degenerate case."""
+
+
+class RpcSamplingServer:
+    """Serves one process's local samplers to its peers.
+
+    Accept loop + one handler thread per peer connection (all daemon):
+    requests are ``(op, payload)`` pickles — ``hop`` dispatches into
+    ``DistributedSamplerSystem.serve_hop`` (per-sampler locks inside),
+    ``ping`` answers readiness probes.  Errors are pickled back and
+    re-raised on the caller, so a crashing peer surfaces instead of
+    hanging the fleet.
+    """
+
+    def __init__(self, system, port: int, authkey: bytes = _AUTHKEY):
+        self.system = system
+        self.listener = Listener(("127.0.0.1", port), authkey=authkey)
+        self._closing = False
+        self._accept = threading.Thread(target=self._accept_loop,
+                                        daemon=True,
+                                        name=f"rpc-accept:{port}")
+        self._accept.start()
+
+    def _accept_loop(self) -> None:
+        while not self._closing:
+            try:
+                conn = self.listener.accept()
+            except Exception:
+                if self._closing:
+                    return
+                time.sleep(0.05)   # don't busy-spin a broken listener
+                continue
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True, name="rpc-serve").start()
+
+    def _serve_conn(self, conn) -> None:
+        with conn:
+            while True:
+                try:
+                    raw = conn.recv_bytes()
+                except (EOFError, OSError):
+                    return
+                try:
+                    # the unpickle is inside the try: a malformed frame
+                    # must reply an error (which re-raises on the
+                    # caller), not kill this thread and leave the peer
+                    # with a bare EOFError
+                    op, payload = pickle.loads(raw)
+                    if op == "close":
+                        return
+                    if op == "hop":
+                        out = self.system.serve_hop(*payload)
+                    elif op == "ping":
+                        out = "pong"
+                    else:
+                        raise ValueError(f"unknown rpc op {op!r}")
+                    reply = (_OK, out)
+                except Exception as e:  # surface on the caller
+                    reply = (_ERR, f"{type(e).__name__}: {e}")
+                try:
+                    conn.send_bytes(pickle.dumps(
+                        reply, protocol=pickle.HIGHEST_PROTOCOL))
+                except (BrokenPipeError, OSError):
+                    return
+
+    def close(self) -> None:
+        self._closing = True
+        try:
+            self.listener.close()
+        except OSError:
+            pass
+
+
+class RpcTransport(SamplingTransport):
+    """One machine per process; remote hops go over loopback TCP.
+
+    ``ports[m]`` is machine *m*'s sampling-server port.  ``barrier``
+    rides the jax.distributed coordination service already set up by
+    ``repro.launch.multihost`` — no device work, pure host sync.
+    """
+
+    def __init__(self, process_id: int, n_processes: int,
+                 ports: Sequence[int], authkey: bytes = _AUTHKEY,
+                 connect_timeout_s: float = 60.0,
+                 barrier_timeout_s: float = 600.0):
+        assert len(ports) == n_processes, (ports, n_processes)
+        self.process_id = process_id
+        self.n_processes = n_processes
+        self.ports = list(ports)
+        self.authkey = authkey
+        self.connect_timeout_s = connect_timeout_s
+        self.barrier_timeout_s = barrier_timeout_s
+        self.server: Optional[RpcSamplingServer] = None
+        self._conns: Dict[int, Any] = {}
+        self._conn_locks: Dict[int, threading.Lock] = {}
+        self._bseq = 0
+        self.calls = 0
+        self.bytes_out = 0
+        self.bytes_in = 0
+        self.wait_s = 0.0
+
+    def local_machines(self, n_machines: int) -> Tuple[int, ...]:
+        assert n_machines == self.n_processes, (
+            f"multihost runs one machine per process: P={n_machines} "
+            f"machines need {n_machines} processes, got "
+            f"{self.n_processes}")
+        return (self.process_id,)
+
+    def bind(self, system) -> None:
+        self.server = RpcSamplingServer(
+            system, self.ports[self.process_id], self.authkey)
+
+    def connect(self) -> None:
+        deadline = time.monotonic() + self.connect_timeout_s
+        for m in range(self.n_processes):
+            if m == self.process_id:
+                continue
+            addr = ("127.0.0.1", self.ports[m])
+            while True:
+                try:
+                    conn = Client(addr, authkey=self.authkey)
+                    break
+                except (ConnectionRefusedError, OSError):
+                    if time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"sampling server of machine {m} at {addr} "
+                            f"never came up")
+                    time.sleep(0.05)
+            self._conns[m] = conn
+            self._conn_locks[m] = threading.Lock()
+        for m in self._conns:
+            assert self._call(m, "ping") == "pong"
+
+    def _call(self, machine: int, op: str, *payload):
+        data = pickle.dumps((op, payload),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+        t0 = time.perf_counter()
+        with self._conn_locks[machine]:
+            conn = self._conns[machine]
+            conn.send_bytes(data)
+            raw = conn.recv_bytes()
+        self.wait_s += time.perf_counter() - t0
+        self.calls += 1
+        self.bytes_out += len(data)
+        self.bytes_in += len(raw)
+        status, result = pickle.loads(raw)
+        if status == _ERR:
+            raise RuntimeError(
+                f"sampling server of machine {machine} failed: {result}")
+        return result
+
+    def sample_hop(self, machine: int, rank: int, targets: np.ndarray,
+                   times: np.ndarray, pmask: np.ndarray, k: int):
+        return self._call(machine, "hop", machine, rank,
+                          np.asarray(targets), np.asarray(times),
+                          np.asarray(pmask), int(k))
+
+    def barrier(self, tag: str) -> None:
+        """Host barrier over the jax.distributed coordination service.
+
+        Every process calls barrier() at identical program points with
+        identical tags, so the per-transport sequence number makes each
+        barrier id unique AND identical fleet-wide.
+        """
+        from jax._src import distributed
+        client = distributed.global_state.client
+        if client is None:  # not under jax.distributed (unit tests)
+            return
+        self._bseq += 1
+        client.wait_at_barrier(f"repro-mh-{tag}-{self._bseq}",
+                               timeout_in_ms=int(
+                                   self.barrier_timeout_s * 1000))
+
+    def close(self) -> None:
+        for m, conn in self._conns.items():
+            try:
+                conn.send_bytes(pickle.dumps(("close", ()),
+                                             protocol=pickle.HIGHEST_PROTOCOL))
+                conn.close()
+            except (BrokenPipeError, OSError):
+                pass
+        self._conns.clear()
+        if self.server is not None:
+            self.server.close()
+
+    def stats(self) -> Dict[str, Any]:
+        return {"calls": self.calls, "bytes_out": self.bytes_out,
+                "bytes_in": self.bytes_in,
+                "wait_s": round(self.wait_s, 6)}

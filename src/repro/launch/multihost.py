@@ -1,0 +1,395 @@
+"""Multi-process multi-"host" launch for distributed continuous
+training (GNNFlow §4.4/§5 as a *system*, not a simulation).
+
+Topology — one OS process per machine, G fake CPU devices per process:
+
+    parent (this module's CLI, a test, or a bench)
+      ├─ picks a coordinator port + one RPC port per machine
+      ├─ spawns P workers:  python <worker> with REPRO_MH_* env
+      │
+      │   worker p                                  worker q
+      │   ┌──────────────────────────┐   hops  ┌──────────────────────┐
+      │   │ partition p  (graph)     │◄───────►│ partition q (graph)  │
+      │   │ rank samplers 0..G-1     │   RPC   │ rank samplers 0..G-1 │
+      │   │ RpcSamplingServer :port_p│         │ RpcSamplingServer    │
+      │   │ trainer ranks 0..G-1 ────┼─psum────┼─── trainer ranks     │
+      │   └──────────────────────────┘  gloo   └──────────────────────┘
+      │        jax.distributed (coordination service + CPU collectives)
+      └─ collects one MH_RESULT json line per worker
+
+Each worker hosts ONE graph partition and its per-rank samplers behind
+an ``RpcSamplingServer`` (``repro.dist.transport``); k-hop requests
+whose owner is remote cross process boundaries on the static
+rank-matched schedule.  Gradients reduce across processes inside the
+same ``shard_map`` collectives the in-process trainer uses — the mesh
+just spans P*G devices over P processes (``jax.distributed`` with gloo
+CPU collectives).  Every worker reads the same deterministic event
+stream and stages only its own ranks' shards of each global batch, so
+the run is numerically the in-process ``DistributedContinuousTrainer``
+with the transport swapped — the parity harness
+(tests/test_multihost.py) pins the two to ≤1e-4 train/eval loss over
+multiple rounds, TGN memory path included.
+
+The in-process mode needs none of this: ``LocalTransport`` (the
+default) hosts all machines in one process, and this module is simply
+never imported.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+_ENV = {
+    "role": "REPRO_MH_ROLE",
+    "pid": "REPRO_MH_PROCESS_ID",
+    "nprocs": "REPRO_MH_NUM_PROCESSES",
+    "coord": "REPRO_MH_COORDINATOR",
+    "rpc_ports": "REPRO_MH_RPC_PORTS",
+    "local_devices": "REPRO_MH_LOCAL_DEVICES",
+    "run_cfg": "REPRO_MH_RUN_CFG",
+}
+RESULT_TAG = "MH_RESULT "
+
+
+@dataclasses.dataclass
+class MultihostSpec:
+    """One worker's view of the fleet, carried in the environment."""
+    process_id: int
+    n_processes: int
+    coordinator: str               # "127.0.0.1:<port>"
+    rpc_ports: Tuple[int, ...]     # sampling-server port per machine
+    local_devices: int             # G fake devices in this process
+
+    @classmethod
+    def from_env(cls, env=os.environ) -> "MultihostSpec":
+        return cls(
+            process_id=int(env[_ENV["pid"]]),
+            n_processes=int(env[_ENV["nprocs"]]),
+            coordinator=env[_ENV["coord"]],
+            rpc_ports=tuple(int(p) for p in
+                            env[_ENV["rpc_ports"]].split(",")),
+            local_devices=int(env[_ENV["local_devices"]]))
+
+
+def free_ports(n: int) -> List[int]:
+    """Reserve n distinct free TCP ports (bind-and-release)."""
+    socks, ports = [], []
+    for _ in range(n):
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        socks.append(s)
+        ports.append(s.getsockname()[1])
+    for s in socks:
+        s.close()
+    return ports
+
+
+def worker_env(process_id: int, n_processes: int, n_local_devices: int,
+               coordinator: str, rpc_ports: Sequence[int],
+               base_env: Optional[Dict[str, str]] = None
+               ) -> Dict[str, str]:
+    """Child environment for one worker.  XLA_FLAGS is overwritten:
+    the fake device count must be fixed *before* the child imports
+    jax, and the parent's own flag (e.g. the test suite's 8) would
+    make every process claim 8 local devices.  Each worker gets G
+    mesh devices + 1 spare: the spare hosts the RPC-served sampler
+    mirrors, so a peer's sampling request never queues behind a
+    collective that is itself waiting for that peer."""
+    env = dict(os.environ if base_env is None else base_env)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_local_devices + 1}")
+    env["JAX_PLATFORMS"] = "cpu"
+    env[_ENV["role"]] = "worker"
+    env[_ENV["pid"]] = str(process_id)
+    env[_ENV["nprocs"]] = str(n_processes)
+    env[_ENV["coord"]] = coordinator
+    env[_ENV["rpc_ports"]] = ",".join(str(p) for p in rpc_ports)
+    env[_ENV["local_devices"]] = str(n_local_devices)
+    return env
+
+
+def launch(worker_cmd: Sequence[str], n_processes: int,
+           n_local_devices: int, *,
+           base_env: Optional[Dict[str, str]] = None,
+           extra_env: Optional[Dict[str, str]] = None,
+           timeout_s: float = 900.0) -> List[Tuple[str, str]]:
+    """Spawn the P-process fleet and wait for it.
+
+    Returns [(stdout, stderr)] per worker on success; on any worker
+    failure or timeout the whole fleet is killed and a RuntimeError
+    carries every worker's output tail (a peer stuck at a barrier is
+    a symptom — the root cause is in the crashed worker's stderr).
+    """
+    ports = free_ports(1 + n_processes)
+    coordinator = f"127.0.0.1:{ports[0]}"
+    rpc_ports = ports[1:]
+    procs: List[subprocess.Popen] = []
+    for pid in range(n_processes):
+        env = worker_env(pid, n_processes, n_local_devices,
+                         coordinator, rpc_ports, base_env=base_env)
+        if extra_env:
+            env.update(extra_env)
+        procs.append(subprocess.Popen(
+            list(worker_cmd), env=env, text=True,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE))
+    # drain every worker's pipes CONCURRENTLY: a worker that fills its
+    # 64KB pipe buffer while a sibling is being waited on would block
+    # on write, stall the fleet's collectives, and turn one loud
+    # traceback into an opaque all-worker timeout
+    bufs: List[Dict[str, str]] = [{} for _ in procs]
+
+    def _drain(i: int) -> None:
+        try:
+            out, err = procs[i].communicate()   # also reaps the child
+        except Exception as e:
+            out, err = "", f"<pipe drain failed: {e}>"
+        bufs[i]["out"], bufs[i]["err"] = out, err
+
+    threads = [threading.Thread(target=_drain, args=(i,), daemon=True)
+               for i in range(n_processes)]
+    for t in threads:
+        t.start()
+    # fail fast: a worker that crashes at startup would otherwise leave
+    # its siblings burning the full barrier/launch timeout at a
+    # rendezvous nobody will join — poll and kill the fleet on the
+    # first abnormal exit so the real traceback surfaces in seconds
+    deadline = time.monotonic() + timeout_s
+    abnormal: Optional[int] = None
+    while time.monotonic() < deadline:
+        if all(not t.is_alive() for t in threads):
+            break
+        bad = [i for i, p in enumerate(procs)
+               if p.poll() is not None and p.returncode != 0]
+        if bad:
+            abnormal = bad[0]
+            break
+        time.sleep(0.2)
+    timed_out = [] if abnormal is not None else \
+        [i for i, t in enumerate(threads) if t.is_alive()]
+    if abnormal is not None or timed_out:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    # communicate() returns once the child dies: harvest whatever the
+    # killed/timed-out workers wrote first
+    for t in threads:
+        t.join(30.0)
+    outs: List[Tuple[str, str]] = []
+    failed: Optional[str] = None
+    if abnormal is not None:
+        failed = (f"worker {abnormal} exited "
+                  f"{procs[abnormal].returncode}\n--- stderr tail ---\n"
+                  f"{bufs[abnormal].get('err', '')[-3000:]}")
+    for pid, p in enumerate(procs):
+        out = bufs[pid].get("out", "")
+        err = bufs[pid].get("err", "")
+        if pid in timed_out:
+            err += f"\n<worker {pid} timed out after {timeout_s}s>"
+            failed = failed or f"worker {pid} timed out"
+        elif p.returncode != 0 and failed is None:
+            failed = (f"worker {pid} exited {p.returncode}\n"
+                      f"--- stderr tail ---\n{err[-3000:]}")
+        outs.append((out, err))
+    if failed:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+        tails = "\n".join(
+            f"=== worker {i}: stdout ===\n{o[-2000:]}\n"
+            f"=== worker {i}: stderr ===\n{e[-2000:]}"
+            for i, (o, e) in enumerate(outs))
+        raise RuntimeError(f"multihost launch failed: {failed}\n{tails}")
+    return outs
+
+
+def parse_results(outs: Sequence[Tuple[str, str]]) -> List[Dict]:
+    """Pull each worker's MH_RESULT json line out of its stdout."""
+    results = []
+    for i, (out, err) in enumerate(outs):
+        lines = [l for l in out.splitlines()
+                 if l.startswith(RESULT_TAG)]
+        if not lines:
+            raise RuntimeError(
+                f"worker {i} emitted no {RESULT_TAG!r} line:\n"
+                f"{out[-2000:]}\n{err[-2000:]}")
+        results.append(json.loads(lines[-1][len(RESULT_TAG):]))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Worker side
+# ---------------------------------------------------------------------------
+
+
+def init_worker_from_env() -> MultihostSpec:
+    """jax.distributed + gloo CPU collectives for this worker.  The
+    parent already exported XLA_FLAGS with the per-process device
+    count, so this is safe to call after importing jax — but before
+    anything touches devices."""
+    spec = MultihostSpec.from_env()
+    import jax
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=spec.coordinator,
+                               num_processes=spec.n_processes,
+                               process_id=spec.process_id)
+    n_local = len(jax.local_devices())
+    if n_local != spec.local_devices + 1:   # G mesh + 1 sampling
+        raise RuntimeError(
+            f"worker {spec.process_id}: {n_local} local devices, "
+            f"expected {spec.local_devices + 1} (XLA_FLAGS not applied "
+            f"before jax import?)")
+    return spec
+
+
+def make_transport(spec: MultihostSpec):
+    from repro.dist.transport import RpcTransport
+    return RpcTransport(spec.process_id, spec.n_processes,
+                        spec.rpc_ports)
+
+
+def drive_rounds(trainer, stream, *, warm: int, round_size: int,
+                 rounds: int, epochs: int = 2,
+                 replay_ratio: float = 0.0,
+                 replay_round: int = -1) -> List[Any]:
+    """The round schedule both the workers AND the in-process parity
+    reference run — one shared driver so 'same schedule' is by
+    construction, not by convention."""
+    trainer.ingest(stream.slice(0, warm))
+    out = []
+    for i in range(rounds):
+        sl = stream.slice(warm + i * round_size,
+                          warm + (i + 1) * round_size)
+        out.append(trainer.train_round(
+            sl, epochs=epochs,
+            replay_ratio=replay_ratio if i == replay_round else 0.0))
+    return out
+
+
+def worker_main(run_cfg: Dict[str, Any],
+                spec: Optional[MultihostSpec] = None) -> Dict[str, Any]:
+    """Run the configured workload as one machine of the fleet and
+    print the MH_RESULT line the parent collects."""
+    spec = spec if spec is not None else init_worker_from_env()
+    transport = make_transport(spec)
+
+    from repro.configs.tgn_gdelt import GNN_MODELS, DistConfig
+    from repro.data.events import synth_ctdg
+    from repro.dist.continuous import DistributedContinuousTrainer
+
+    stream = synth_ctdg(**run_cfg["stream"])
+    cfg = GNN_MODELS[run_cfg["model"]](**run_cfg.get("model_kw", {}))
+    dist = DistConfig(n_machines=spec.n_processes,
+                      n_gpus=spec.local_devices,
+                      **run_cfg.get("dist", {}))
+    tr = DistributedContinuousTrainer(
+        cfg, stream, dist, transport=transport,
+        **run_cfg.get("trainer", {}))
+
+    rounds = []
+    for m in drive_rounds(tr, stream, warm=run_cfg["warm"],
+                          round_size=run_cfg["round_size"],
+                          rounds=run_cfg["rounds"],
+                          epochs=run_cfg.get("epochs", 2),
+                          replay_ratio=run_cfg.get("replay_ratio", 0.0),
+                          replay_round=run_cfg.get("replay_round", -1)):
+        rounds.append(dataclasses.asdict(m))
+    result = {
+        "process_id": spec.process_id,
+        "n_processes": spec.n_processes,
+        "n_local_devices": spec.local_devices,
+        "rounds": rounds,
+        "rpc": transport.stats(),
+    }
+    print(RESULT_TAG + json.dumps(result), flush=True)
+    # drain peers' last remote fetches before tearing the server down
+    transport.barrier("shutdown")
+    transport.close()
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI: `python -m repro.launch.multihost --processes 2 --rounds 3 ...`
+# ---------------------------------------------------------------------------
+
+
+def _default_run_cfg(args) -> Dict[str, Any]:
+    warm, rnd = args.warm, args.round_size
+    return {
+        "model": args.model,
+        "model_kw": dict(d_node=16, d_edge=12, d_time=10, d_hidden=32,
+                         batch_size=args.batch_size,
+                         **({"fanouts": (8, 4), "sampling": "recent"}
+                            if args.model != "tgn" else
+                            {"fanouts": (8,), "d_memory": 16})),
+        "stream": dict(n_nodes=2_000,
+                       n_events=warm + args.rounds * rnd,
+                       t_span=60_000, d_node=16, d_edge=12,
+                       alpha=2.2, seed=7),
+        "dist": {"collective": args.collective},
+        "trainer": dict(threshold=32, cache_ratio=0.1, lr=1e-3,
+                        seed=0, overlap=True),
+        "warm": warm, "round_size": rnd, "rounds": args.rounds,
+        "epochs": args.epochs,
+        "replay_ratio": 0.2, "replay_round": args.rounds - 1,
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    if os.environ.get(_ENV["role"]) == "worker":
+        worker_main(json.loads(os.environ[_ENV["run_cfg"]]))
+        return 0
+
+    ap = argparse.ArgumentParser(
+        description="spawn a P-process distributed continuous-training "
+                    "run on this host (fake CPU devices, real "
+                    "processes/RPC/collectives)")
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--local-devices", type=int, default=2,
+                    help="trainer ranks (fake devices) per process")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--warm", type=int, default=2_048)
+    ap.add_argument("--round-size", type=int, default=1_024)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--model", default="tgat",
+                    choices=("tgat", "tgn", "graphsage", "gat"))
+    ap.add_argument("--collective", default="bucketed",
+                    choices=("bucketed", "quantized", "topk"))
+    ap.add_argument("--timeout", type=float, default=900.0)
+    args = ap.parse_args(argv)
+
+    run_cfg = _default_run_cfg(args)
+    outs = launch([sys.executable, "-m", "repro.launch.multihost"],
+                  args.processes, args.local_devices,
+                  extra_env={_ENV["run_cfg"]: json.dumps(run_cfg)},
+                  timeout_s=args.timeout)
+    results = parse_results(outs)
+    for r in results:
+        last = r["rounds"][-1]
+        print(f"worker {r['process_id']}: "
+              f"{len(r['rounds'])} rounds, last loss "
+              f"{last['loss']:.5f}, ap {last['ap']:.4f}, rpc "
+              f"{r['rpc']['calls']} calls / "
+              f"{r['rpc']['bytes_out'] + r['rpc']['bytes_in']} B / "
+              f"{r['rpc']['wait_s']:.2f}s wait")
+    # replicated training: every process must report the same losses
+    l0 = [rd["loss"] for rd in results[0]["rounds"]]
+    for r in results[1:]:
+        li = [rd["loss"] for rd in r["rounds"]]
+        assert all(abs(a - b) <= 1e-6 for a, b in zip(l0, li)), (l0, li)
+    print(f"OK: {args.processes} processes agree on "
+          f"{len(l0)} round losses")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""Worker entrypoint for the multihost parity harness
+(tests/test_multihost.py) and the multihost benchmark.
+
+Run as ``python _multihost_worker.py '<run_cfg json>'`` with the
+``REPRO_MH_*`` environment exported by ``repro.launch.multihost.launch``
+(the parent sets XLA_FLAGS/JAX_PLATFORMS before the spawn, so jax is
+safe to import transitively here).  All the logic lives in
+``repro.launch.multihost.worker_main`` — this file exists so the test
+harness has a stable, PYTHONPATH-independent script to hand to the
+subprocess launcher.
+"""
+import json
+import sys
+
+from repro.launch import multihost
+
+if __name__ == "__main__":
+    multihost.worker_main(json.loads(sys.argv[1]))

@@ -117,3 +117,75 @@ def test_missing_ids_return_zeros():
     fs = DistributedFeatureStore(2, d_node=4, d_edge=4)
     out = fs.get_node_features(np.array([-1, 999999]))
     assert (out == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher.ingest ordering property (hypothesis)
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(hst.integers(0, 10_000), hst.integers(1, 300),
+       hst.integers(2, 5), hst.booleans())
+def test_dispatcher_ingest_preserves_order_and_loses_nothing(
+        seed, n_events, n_parts, with_deletes):
+    """Property: for ARBITRARY undirected event streams — duplicate
+    timestamps included — partitioned ingest (a) loses no events (each
+    event lands as one directed row on BOTH endpoint owners), (b) keeps
+    every partition's per-node adjacency in chronological (newest-
+    first) order, (c) assigns the batch-order global eids every process
+    can rederive, and (d) tombstone deletes remove exactly the deleted
+    rows everywhere."""
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(2, 60))
+    src = rng.integers(0, n_nodes, n_events)
+    dst = rng.integers(0, n_nodes, n_events)
+    # integer timestamps in a narrow range: tie runs guaranteed
+    ts = np.sort(rng.integers(0, max(2, n_events // 3),
+                              n_events).astype(np.float64))
+
+    parts = [GraphPartition(p, n_parts, threshold=8)
+             for p in range(n_parts)]
+    disp = Dispatcher(parts, undirected=True)
+    eids = disp.add_edges(src, dst, ts)
+
+    np.testing.assert_array_equal(eids, np.arange(n_events))  # (c)
+    assert sum(p.local_edges for p in parts) == 2 * n_events  # (a)
+
+    expected = {}    # (owner, node) -> multiset of (nbr, eid, ts)
+    for u, v, t, e in zip(src, dst, ts, eids):
+        expected.setdefault((int(u) % n_parts, int(u)), []).append(
+            (int(v), int(e), float(t)))
+        expected.setdefault((int(v) % n_parts, int(v)), []).append(
+            (int(u), int(e), float(t)))
+
+    def check(deleted=frozenset()):
+        total = 0
+        for p, part in enumerate(parts):
+            for node in range(n_nodes):
+                nbrs, es, tss = part.graph.neighbors_in_window(
+                    node, -np.inf, np.inf)
+                if node % n_parts != p:
+                    assert len(nbrs) == 0   # edges only on the owner
+                    continue
+                assert (np.diff(tss) <= 0).all()          # (b)
+                want = [w for w in expected.get((p, node), [])
+                        if w[1] not in deleted]
+                assert sorted(zip(nbrs.tolist(), es.tolist(),
+                                  tss.tolist())) == sorted(want)
+                total += len(nbrs)
+        return total
+
+    assert check() == 2 * n_events
+
+    if with_deletes and n_events:
+        drop = rng.choice(n_events, size=max(1, n_events // 4),
+                          replace=False)
+        removed = disp.delete_edges(drop)
+        # each event occupies one row per endpoint owner        # (d)
+        assert removed == 2 * len(drop)
+        assert check(frozenset(int(d) for d in drop)) \
+            == 2 * (n_events - len(drop))
+        assert disp.delete_edges(drop) == 0   # idempotent

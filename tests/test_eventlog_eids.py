@@ -1,0 +1,119 @@
+"""Explicit per-event edge ids (the EventLog tied-timestamp fix).
+
+``EventLog.eids_for`` disambiguates tied timestamps only within one
+query batch: ties that straddle a training-batch boundary (or are
+thinned by replay sampling) map to the FIRST tied event's eid, feeding
+the wrong edge features into TGN raw messages on duplicate-timestamp
+data (ROADMAP, PR 4 review).  The fix threads the ingest-assigned ids
+through ``EventStream.eid`` -> ``replay_mix`` ->
+``chronological_batches`` -> the TGN commit, so the ts->eid search is
+only a fallback for streams that never went through ingest.
+"""
+import numpy as np
+
+from repro.configs.tgn_gdelt import tgn
+from repro.core.continuous import ContinuousTrainer, EventLog
+from repro.data.events import EventStream
+from repro.data.loader import chronological_batches, replay_mix
+
+
+def _tied_stream(n=48, batch=8):
+    """Distinct node pair per event; one duplicate timestamp exactly
+    straddling the training-batch boundary inside the finetune round
+    (events 32..47 in batches of 8: the tie is ts[39] == ts[40])."""
+    src = 2 * np.arange(n, dtype=np.int64)
+    dst = 2 * np.arange(n, dtype=np.int64) + 1
+    ts = np.arange(n, dtype=np.float64) * 10.0
+    ts[40] = ts[39]                       # tie across batches 0|1
+    ts[41:] = ts[40] + 10.0 * np.arange(1, n - 41 + 1)
+    assert (np.diff(ts) >= 0).all()
+    return EventStream(src, dst, ts, n_nodes=2 * n, d_node=4, d_edge=4)
+
+
+def test_eids_for_is_ambiguous_across_query_batches():
+    """The motivating defect, pinned: the ts->eid search maps a tie
+    that starts a NEW query batch back to the first tied event."""
+    log = EventLog()
+    ts = np.array([0.0, 10.0, 10.0, 20.0])
+    log.append(ts, np.array([100, 101, 102, 103]))
+    # one query batch: tie rank disambiguates correctly
+    np.testing.assert_array_equal(log.eids_for(ts),
+                                  [100, 101, 102, 103])
+    # split at the tie (the training-batch boundary): the second tied
+    # event is the first of its batch -> rank 0 -> WRONG id 101
+    got = np.concatenate([log.eids_for(ts[:2]), log.eids_for(ts[2:])])
+    assert got[2] == 101        # the ambiguity explicit ids eliminate
+
+
+def test_tgn_raw_messages_use_explicit_eids_across_tied_boundary():
+    """End to end: duplicate timestamps straddling a training-batch
+    boundary feed TGN raw messages with the RIGHT edge ids."""
+    stream = _tied_stream()
+    cfg = tgn(d_node=4, d_edge=4, d_time=4, d_hidden=8, d_memory=8,
+              fanouts=(2,), batch_size=8)
+    tr = ContinuousTrainer(cfg, stream, threshold=16, cache_ratio=0.5,
+                           lr=1e-3, seed=0)
+    tr.ingest(stream.slice(0, 32))
+    rnd = stream.slice(32, 48)
+    tr.train_round(rnd, epochs=1)
+    eids = tr._last_eids                 # ingest-assigned, one per event
+    assert len(eids) == 16
+    # every node appears in exactly one event, so its staged raw
+    # message must carry THAT event's id — including event 40, whose
+    # timestamp ties with event 39 across the batch boundary (the old
+    # ts->eid search handed it event 39's id)
+    np.testing.assert_array_equal(tr.memory.raw_eid[rnd.src], eids)
+    np.testing.assert_array_equal(tr.memory.raw_eid[rnd.dst], eids)
+    i40 = 40 - 32
+    assert tr.memory.raw_eid[rnd.src[i40]] == eids[i40] != eids[i40 - 1]
+
+
+def test_replay_mix_threads_eids_through_thinning_and_ties():
+    """Replay sampling thins tie runs: every surviving event must keep
+    ITS id (unrecoverable from timestamps alone)."""
+    rng = np.random.default_rng(0)
+    n_h, n_n = 40, 20
+    hist = EventStream(
+        src=100 + np.arange(n_h, dtype=np.int64),
+        dst=1000 + np.arange(n_h, dtype=np.int64),
+        ts=np.repeat(np.arange(10, dtype=np.float64), 4),  # 4-way ties
+        n_nodes=2000, d_node=4, d_edge=4,
+        eid=np.arange(n_h, dtype=np.int64))
+    new = EventStream(
+        src=100 + n_h + np.arange(n_n, dtype=np.int64),
+        dst=1000 + n_h + np.arange(n_n, dtype=np.int64),
+        ts=np.full(n_n, 50.0),                             # one big tie
+        n_nodes=2000, d_node=4, d_edge=4,
+        eid=n_h + np.arange(n_n, dtype=np.int64))
+    out = replay_mix(new, hist, replay_ratio=0.5, rng=rng)
+    assert out.eid is not None and len(out.eid) == len(out.src)
+    # src encodes the event's identity: eid must still match it
+    np.testing.assert_array_equal(out.eid, out.src - 100)
+    assert (np.diff(out.ts) >= 0).all()
+    # and chronological_batches hands the slice through
+    batches = list(chronological_batches(out, 7))
+    got = np.concatenate([b[3] for b in batches])
+    np.testing.assert_array_equal(got, out.eid)
+
+
+def test_chronological_batches_without_eids_yields_none():
+    s = EventStream(np.arange(5), np.arange(5) + 10,
+                    np.arange(5, dtype=np.float64), n_nodes=20,
+                    d_node=4, d_edge=4)
+    for _, _, _, eids in chronological_batches(s, 2):
+        assert eids is None
+
+
+def test_history_accumulates_eids_across_rounds():
+    """train_round attaches ingest-assigned ids; the replay history
+    keeps carrying them round over round."""
+    stream = _tied_stream(64)
+    cfg = tgn(d_node=4, d_edge=4, d_time=4, d_hidden=8, d_memory=8,
+              fanouts=(2,), batch_size=8)
+    tr = ContinuousTrainer(cfg, stream, threshold=16, cache_ratio=0.5,
+                           lr=1e-3, seed=0)
+    tr.ingest(stream.slice(0, 16))
+    tr.train_round(stream.slice(16, 32), epochs=1)
+    tr.train_round(stream.slice(32, 48), epochs=1, replay_ratio=0.5)
+    assert tr.history.eid is not None
+    assert len(tr.history.eid) == len(tr.history.src)

@@ -200,3 +200,90 @@ def test_ragged_tail_padded_not_recompiled():
     out = _run(cfg, overlap=True)
     for m in out:
         assert np.isfinite(m.loss) and 0.0 <= m.ap <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# failure modes: a stage raising mid-round must surface, not hang, and
+# leave the trainer resumable
+# ---------------------------------------------------------------------------
+
+import pytest  # noqa: E402
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def _failing_engine(overlap, fail_stage, fail_item):
+    calls = []
+    eng = PipelineEngine(overlap=overlap)
+
+    def stage(name, it):
+        calls.append((name, it))
+        if name == fail_stage and it == fail_item:
+            raise _Boom(f"{name}({it})")
+        return it
+
+    with pytest.raises(_Boom):
+        eng.run([1, 2, 3],
+                prefetch=lambda it: stage("prefetch", it),
+                launch=lambda it, st: stage("launch", it),
+                complete=lambda h, it: stage("complete", it))
+    return calls, eng
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+@pytest.mark.parametrize("fail_stage", ["prefetch", "launch"])
+def test_engine_surfaces_stage_error_and_drains_inflight(overlap,
+                                                         fail_stage):
+    """prefetch/launch raising on batch 2: the exception propagates
+    (no hang), and every LAUNCHED batch was completed — the in-flight
+    step's host side effects (TGN memory commit) are not silently
+    dropped."""
+    calls, _ = _failing_engine(overlap, fail_stage, 2)
+    # batch 1 launched successfully -> completed exactly once; the
+    # failed attempt itself launched nothing that needs draining
+    ok_launched = [i for (n, i) in calls if n == "launch"
+                   and not (fail_stage == "launch" and i == 2)]
+    completed = [i for (n, i) in calls if n == "complete"]
+    assert completed == ok_launched == [1]
+    # and the round stopped: batch 3 never entered the pipeline
+    assert ("prefetch", 3) not in calls and ("launch", 3) not in calls
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_engine_complete_error_not_doubled(overlap):
+    """complete itself raising must surface without being re-invoked
+    for the same batch by the drain path (double side effects)."""
+    calls, _ = _failing_engine(overlap, "complete", 1)
+    assert [i for (n, i) in calls if n == "complete"] == [1]
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_trainer_resumes_after_mid_round_failure(overlap):
+    """A step blowing up mid-round leaves the trainer usable: the
+    exception surfaces out of train_round, and the next round runs
+    clean with finite metrics (overlap and serial schedules)."""
+    cfg = tgat(sampling="recent", d_node=8, d_edge=8, d_time=8,
+               d_hidden=16, fanouts=(4, 4), batch_size=64)
+    tr = ContinuousTrainer(cfg, STREAM, threshold=16, cache_ratio=0.2,
+                           lr=5e-4, seed=0, overlap=overlap)
+    tr.ingest(STREAM.slice(0, WARM))
+
+    real = tr._launch_train
+    count = {"n": 0}
+
+    def flaky(item, staged):
+        count["n"] += 1
+        if count["n"] == 2:
+            raise _Boom("mid-round failure")
+        return real(item, staged)
+
+    tr._launch_train = flaky
+    with pytest.raises(_Boom):
+        tr.train_round(STREAM.slice(WARM, WARM + ROUND), epochs=1)
+    tr._launch_train = real
+
+    m = tr.train_round(STREAM.slice(WARM + ROUND, WARM + 2 * ROUND),
+                       epochs=1)
+    assert np.isfinite(m.loss) and 0.0 <= m.ap <= 1.0
