@@ -57,6 +57,12 @@ def _row(m, total: float) -> Dict:
         "load_cv": m.load_cv,
         "node_hit_per_part": list(m.node_hit_per_part),
         "edge_hit_per_part": list(m.edge_hit_per_part),
+        # StateService traffic (features + TGN memory over the
+        # redesigned access API) and per-process resident footprint
+        "state_calls": m.state_calls,
+        "state_bytes": m.state_bytes,
+        "state_wait_s": m.state_wait_s,
+        "state_resident_bytes": m.state_resident_bytes,
     }
 
 
@@ -72,12 +78,12 @@ def run() -> None:
                d_hidden=32, fanouts=(8, 4),
                batch_size=256 if smoke else 512)
 
-    def _run_mode(kw, overlap: bool):
+    def _run_mode(kw, overlap: bool, state: str = "replicated"):
         dist = DistConfig(n_machines=4, n_gpus=2, **kw)
         tr = DistributedContinuousTrainer(cfg, stream, dist,
                                           threshold=32, cache_ratio=0.1,
                                           lr=1e-3, seed=0,
-                                          overlap=overlap)
+                                          overlap=overlap, state=state)
         tr.ingest(stream.slice(0, warm))
         rounds = []
         for r in range(n_rounds):
@@ -122,6 +128,28 @@ def run() -> None:
              f"bytes_per_step={tr.reduce_bytes_per_step};"
              f"exact_frac="
              f"{tr.reduce_bytes_per_step / max(results['bucketed']['reduce_bytes_per_step'], 1):.3f}")
+
+    # ---- StateService: owner-sharded vs replicated placement ----
+    # in-process every shard is hosted (no wire), so the sharded
+    # service must be numerically IDENTICAL — only the state-RPC
+    # accounting model differs
+    tr_sh, sharded_rounds = _run_mode(MODES["bucketed"], overlap=True,
+                                      state="sharded")
+    d = max(abs(a["loss"] - b["loss"]) for a, b in
+            zip(results["bucketed"]["rounds"], sharded_rounds))
+    assert d <= 1e-6, f"sharded != replicated state loss ({d})"
+    results["state_sharded"] = {
+        "rounds": sharded_rounds,
+        "resident_bytes": tr_sh.state.resident_bytes(),
+        "replicated_resident_bytes":
+            results["bucketed"]["rounds"][-1]["state_resident_bytes"],
+    }
+    last_sh = sharded_rounds[-1]
+    emit("distributed/state_sharded", 0.0,
+         f"calls={last_sh['state_calls']};"
+         f"bytes={last_sh['state_bytes']};"
+         f"resident_B={last_sh['state_resident_bytes']};"
+         f"loss_delta={d:.2e}")
 
     # ---- §4.3 overlap: serial baseline vs the pipelined executor ----
     piped_rounds = results["bucketed"]["rounds"]

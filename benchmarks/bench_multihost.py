@@ -91,6 +91,10 @@ def run() -> None:
                 "rpc_wire_bytes": m["rpc_wire_bytes"],
                 "reduce_bytes": m["reduce_bytes"],
                 "dispatch_bytes": m["dispatch_bytes"],
+                "state_calls": m["state_calls"],
+                "state_bytes": m["state_bytes"],
+                "state_wait_s": m["state_wait_s"],
+                "state_resident_bytes": m["state_resident_bytes"],
                 "loss": m["loss"], "ap": m["ap"],
             }
             rows.append({"worker": pid, "round": i, **split})
@@ -109,6 +113,31 @@ def run() -> None:
     emit("multihost/launch_wall", wall * 1e6,
          f"P={P} G={G} rpc_bytes={total_rpc}")
 
+    # ---- owner-sharded StateService fleet: each process holds 1/P of
+    # the feature/memory tables, remote rows cross the wire ----
+    sh_cfg = dict(run_cfg,
+                  trainer=dict(run_cfg["trainer"], state="sharded"))
+    t1 = time.time()
+    sh_outs = multihost.launch(
+        [sys.executable, str(WORKER), json.dumps(sh_cfg)],
+        n_processes=P, n_local_devices=G, timeout_s=1500.0,
+        extra_env={"PYTHONPATH": f"{src}:{pp}" if pp else src})
+    sh_wall = time.time() - t1
+    sh_results = multihost.parse_results(sh_outs)
+    # sharded placement must not change the numbers
+    ls = [r["loss"] for r in sh_results[0]["rounds"]]
+    assert all(abs(a - b) <= 1e-4 for a, b in zip(l0, ls)), (l0, ls)
+    rep_res = results[0]["state"]["resident_bytes"]
+    for res in sh_results:
+        ss = res["state"]
+        assert ss["mode"] == "sharded" and ss["wire_calls"] > 0
+        emit(f"multihost/state_sharded/worker{res['process_id']}",
+             ss["wait_s"] * 1e6,
+             f"wire_calls={ss['wire_calls']};"
+             f"wire_B={ss['wire_bytes']};"
+             f"residentB={ss['resident_bytes']}"
+             f"(repl={rep_res})")
+
     save_json("multihost", {
         "topology": {"processes": P, "ranks_per_process": G,
                      "devices_per_process": G + 1,
@@ -118,6 +147,14 @@ def run() -> None:
         "launch_wall_s": wall,
         "rounds": rows,
         "rpc_totals": [r["rpc"] for r in results],
+        "state_totals": [r["state"] for r in results],
+        "sharded_state": {
+            "launch_wall_s": sh_wall,
+            "state_totals": [r["state"] for r in sh_results],
+            "replicated_resident_bytes": rep_res,
+            "loss_delta_vs_replicated": max(
+                abs(a - b) for a, b in zip(l0, ls)),
+        },
         "losses_agree": True,
     })
 

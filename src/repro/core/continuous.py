@@ -40,7 +40,7 @@ import numpy as np
 from repro.configs.tgn_gdelt import GNNConfig
 from repro.core.dgraph import DynamicGraph
 from repro.core.feature_cache import FeatureCache
-from repro.core.feature_store import DistributedFeatureStore
+from repro.core.feature_store import ReplicatedStateService, StateService
 from repro.core.pipeline import (FeatureAssembler, PipelineEngine,
                                  pad_tail, pow2_pad_len)
 from repro.core.sampling import TemporalSampler
@@ -112,9 +112,9 @@ class EventLog:
 
 
 class TGNMemory:
-    def __init__(self, cfg: GNNConfig, store: DistributedFeatureStore):
+    def __init__(self, cfg: GNNConfig, state: StateService):
         self.cfg = cfg
-        self.store = store
+        self.state = state
         n0 = 1024
         self.raw_other = np.full(n0, NULL, np.int64)
         self.raw_eid = np.full(n0, NULL, np.int64)
@@ -141,20 +141,29 @@ class TGNMemory:
         other = np.where(has, self.raw_other[safe], 0)
         eid = np.where(has, self.raw_eid[safe], 0)
         t = np.where(has, self.raw_t[safe], 0.0)
+        mem, last_upd = self.state.get_memory(ids)
+        other_mem, _ = self.state.get_memory(other)
         return {
-            "mem": jnp.asarray(self.store.get_memory(ids)),
-            "last_upd": jnp.asarray(self.store.get_memory_ts(ids),
-                                    jnp.float32),
-            "other_mem": jnp.asarray(self.store.get_memory(other)),
+            "mem": jnp.asarray(mem),
+            "last_upd": jnp.asarray(last_upd, jnp.float32),
+            "other_mem": jnp.asarray(other_mem),
             "e_feat": jnp.asarray(edge_feat_fn(eid)),
             "msg_t": jnp.asarray(t, jnp.float32),
             "has": jnp.asarray(has),
         }
 
     def commit_and_stage(self, mem_params, src, dst, ts, eids,
-                         edge_feat_fn) -> None:
+                         edge_feat_fn, fence=None) -> None:
         """After a step: commit pending messages of this batch's endpoints
-        (stop-grad values), then stage the new raw messages."""
+        (stop-grad values), then stage the new raw messages.
+
+        ``fence`` (a callable or None) runs between the gather of the
+        pre-commit memory state and the ``put_memory`` that overwrites
+        it: with a cross-process sharded store, every process must
+        finish READING step t-1's memory before any owner writes step
+        t's values into the shared shard.  The pending set derives from
+        replicated host state, so all SPMD processes take the same
+        branch and the fence (a fleet barrier) stays aligned."""
         nodes = np.concatenate([src, dst])
         others = np.concatenate([dst, src])
         tts = np.concatenate([ts, ts])
@@ -168,8 +177,10 @@ class TGNMemory:
             new_mem = G.memory_batch_update(
                 mem_params, jnp.asarray(pend), g["mem"], g["last_upd"],
                 g["other_mem"], g["e_feat"], g["msg_t"])
-            self.store.put_memory(pend, np.asarray(new_mem),
-                                  self.raw_t[pend])
+            new_mem = np.asarray(new_mem)
+            if fence is not None:
+                fence()     # all peers done reading the old memory
+            self.state.put_memory(pend, new_mem, self.raw_t[pend])
             self.raw_has[pend] = False
         # stage new messages, last event per node wins ('last' aggregator;
         # events are time-sorted so later assignment overwrites earlier)
@@ -297,9 +308,7 @@ class ContinuousTrainer:
         self.rng = np.random.default_rng(seed)
 
         self._init_sampling(threshold, seed)    # sets self.n_partitions
-        self.store = DistributedFeatureStore(
-            self.n_partitions, d_node=cfg.d_node, d_edge=cfg.d_edge,
-            d_memory=cfg.d_memory if cfg.use_memory else 0)
+        self.state = self._make_state()
         cache_n = max(64, int(cache_ratio * stream.n_nodes))
         cache_e = max(64, int(cache_ratio * len(stream)))
         self.node_cache = FeatureCache(
@@ -311,13 +320,13 @@ class ContinuousTrainer:
 
         self.params: Dict[str, Any] = G.init_params(
             cfg, jax.random.PRNGKey(seed))
-        self.memory = TGNMemory(cfg, self.store) if cfg.use_memory \
+        self.memory = TGNMemory(cfg, self.state) if cfg.use_memory \
             else None
         self.events = EventLog()
         self._last_eids = np.zeros(0, np.int64)
         self.assembler = FeatureAssembler(
             cfg, fetch_node=self._fetch_node, fetch_edge=self._fetch_edge,
-            edge_feat_fn=self.store.get_edge_features, memory=self.memory,
+            edge_feat_fn=self.state.get_edge_feats, memory=self.memory,
             timers={"sample": 0.0, "fetch": 0.0, "ingest": 0.0,
                     "step": 0.0})
         self.builder = BatchBuilder(stream, rng=self.rng)
@@ -332,6 +341,21 @@ class ContinuousTrainer:
         self.engine = PipelineEngine(overlap=overlap)
 
     # -- topology hooks (overridden by the distributed trainer) -----------
+    def _make_state(self) -> StateService:
+        """State-service factory: the replicated service is the tier-1
+        default; ``repro.dist.continuous`` swaps in the owner-sharded
+        one when asked (``state="sharded"``)."""
+        cfg = self.cfg
+        return ReplicatedStateService(
+            self.n_partitions, d_node=cfg.d_node, d_edge=cfg.d_edge,
+            d_memory=cfg.d_memory if cfg.use_memory else 0)
+
+    @property
+    def store(self) -> StateService:
+        """Deprecated alias for :attr:`state` (PR-6 migration note in
+        repro.core.feature_store) — same object, new name."""
+        return self.state
+
     def _init_sampling(self, threshold: int, seed: int) -> None:
         self.n_partitions = 1
         self.graph = DynamicGraph(threshold=threshold, undirected=True)
@@ -368,11 +392,11 @@ class ContinuousTrainer:
                                            dtype=np.int64)
         self.events.append(batch.ts, self._last_eids)
         nodes = np.unique(np.concatenate([batch.src, batch.dst]))
-        self.store.put_node_features(nodes, batch.node_features(nodes))
+        self.state.put_node_feats(nodes, batch.node_features(nodes))
         uniq_e = np.unique(eids)
-        # single-partition store here: owner arg is the hash key only
-        self.store.put_edge_features(uniq_e, np.zeros_like(uniq_e),
-                                     batch.edge_features(uniq_e))
+        # single-partition service here: every src hashes to owner 0
+        self.state.register_edges(uniq_e, np.zeros_like(uniq_e))
+        self.state.put_edge_feats(uniq_e, batch.edge_features(uniq_e))
         if self._snap is None:
             self._snap = build_snapshot(self.graph)
         else:
@@ -386,11 +410,11 @@ class ContinuousTrainer:
 
     def _fetch_node(self, ids):
         return self.node_cache.fetch(
-            ids, lambda miss: self.store.get_node_features(miss))
+            ids, lambda miss: self.state.get_node_feats(miss))
 
     def _fetch_edge(self, eids):
         return self.edge_cache.fetch(
-            eids, lambda miss: self.store.get_edge_features(miss))
+            eids, lambda miss: self.state.get_edge_feats(miss))
 
     # -- pipeline stages ---------------------------------------------------
     def _stage_batch(self, src, dst, ts) -> Dict[str, Any]:
@@ -433,6 +457,12 @@ class ContinuousTrainer:
         its mesh-replicated params)."""
         return self.params["memory"]
 
+    def _memory_fence(self):
+        """Read/write fence handed to the TGN commit — None in-process;
+        the distributed trainer returns a fleet barrier when the memory
+        shards are cross-process (sharded multihost state)."""
+        return None
+
     def _complete_train(self, loss, item) -> float:
         """Stage boundary: block on the in-flight step, then apply its
         host side effects (TGN raw-message commit)."""
@@ -445,7 +475,7 @@ class ContinuousTrainer:
                 eids = self.events.eids_for(ts)  # back to the ts search
             self.memory.commit_and_stage(
                 self._memory_params(), src, dst, ts, eids,
-                self.store.get_edge_features)
+                self.state.get_edge_feats, fence=self._memory_fence())
         return loss
 
     # -- public API --------------------------------------------------------

@@ -1,16 +1,52 @@
-"""Distributed feature store (GNNFlow §4.4): node/edge features + TGN node
-memories, partitioned by the same hash as the graph.
+"""State service: node/edge features + TGN node memories behind ONE
+access API (GNNFlow §4.4).
 
-Host-resident (the paper keeps features in shared host memory too); the
-device-side FeatureCache sits in front. Node features and memories are
-dense arrays indexed by node id; edge features are stored append-only in
-edge-id order (new edges get larger ids), so lookups are O(1) — the
-paper's "searchsorted over ascending edge ids" degenerates to direct
-indexing with our contiguous id assignment.
+Every consumer — ``BatchBuilder``/``FeatureAssembler`` staging, both
+trainers, the TGN raw-message commit — reads and writes training state
+through the :class:`StateService` protocol, keyed by *global* ids:
+
+    put_node_feats(ids, feats)        get_node_feats(ids)   -> (N, d)
+    register_edges(eids, src)         # owner metadata, SPMD-replicated
+    put_edge_feats(eids, feats)       get_edge_feats(eids)  -> (N, d)
+    put_memory(ids, mem, ts)          get_memory(ids)       -> (mem, ts)
+    resident_bytes() / stats()
+
+Two implementations share the surface:
+
+``ReplicatedStateService`` (here)
+    Today's behavior and the tier-1 default: P hash partitions all
+    hosted in-process, remote traffic *modeled* (byte/call-accounted
+    when a read or write crosses ``local_rank``'s partition boundary).
+    Each SPMD process derives an identical full replica from the
+    deterministic ingest + the replicated step.
+
+``ShardedStateService`` (``repro.dist.state``)
+    The paper's placement: a process holds ONLY the partitions it owns
+    (compact local rows, ~1/P resident bytes) and serves peers through
+    ``feat_get``/``feat_put``/``mem_get``/``mem_put`` ops on
+    ``repro.dist.transport``, with the device ``FeatureCache`` mounted
+    in front to absorb remote latency.
+
+Storage is host-resident (the paper keeps features in shared host
+memory too). Node features and memories are dense arrays indexed by
+node id; edge features are stored append-only in edge-id order (new
+edges get larger ids), so lookups are O(1) — the paper's "searchsorted
+over ascending edge ids" degenerates to direct indexing with our
+contiguous id assignment.
+
+Migration note (PR 6): the pre-redesign ``DistributedFeatureStore``
+surface had asymmetric signatures — ``put_edge_features(eids, src,
+feats)`` vs ``get_edge_features(eids)``, and ``put_memory(ids, mem,
+ts)`` vs split ``get_memory``/``get_memory_ts``. The old names remain
+as thin deprecation shims for one PR (``DistributedFeatureStore`` is
+now a deprecated alias of ``ReplicatedStateService`` keeping the old
+mem-only ``get_memory`` return); new code uses the symmetric pairs
+above.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Any, Dict, Tuple
 
 import numpy as np
 
@@ -19,13 +55,23 @@ from repro.core.partition import owner_of
 _GROW = 1.5
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated (PR-6 StateService redesign); "
+                  f"use {new}", DeprecationWarning, stacklevel=3)
+
+
 class _Dense:
-    """Growable dense (id -> vector) table."""
+    """Growable dense (row -> vector) table with used-row accounting
+    (``used`` counts distinct rows ever written — the resident-footprint
+    measure ``resident_bytes`` reports, independent of the geometric
+    over-allocation)."""
 
     def __init__(self, dim: int, initial: int = 1024):
         self.dim = dim
         self.data = np.zeros((initial, dim), np.float32)
+        self.written = np.zeros(initial, bool)
         self.size = 0
+        self.used = 0
 
     def _ensure(self, n: int) -> None:
         if n <= len(self.data):
@@ -36,12 +82,19 @@ class _Dense:
         grown = np.zeros((new, self.dim), np.float32)
         grown[:len(self.data)] = self.data
         self.data = grown
+        w = np.zeros(new, bool)
+        w[:len(self.written)] = self.written
+        self.written = w
         self.size = n
 
     def set(self, ids: np.ndarray, vals: np.ndarray) -> None:
         if len(ids) == 0:
             return
         self._ensure(int(ids.max()) + 1)
+        fresh = ids[~self.written[ids]]
+        if len(fresh):
+            self.used += len(np.unique(fresh))
+            self.written[fresh] = True
         self.data[ids] = vals
 
     def get(self, ids: np.ndarray) -> np.ndarray:
@@ -51,8 +104,96 @@ class _Dense:
         return out
 
 
+# ---------------------------------------------------------------------------
+# The protocol (plus one-PR deprecation shims for the old surface)
+# ---------------------------------------------------------------------------
+
+
+class StateService:
+    """Access protocol for training state keyed by global ids.
+
+    Implementations route each id to its hash owner (``owner_of``,
+    id % P); unknown and negative ids read as zeros (padding lanes).
+    ``register_edges`` is *metadata*: every SPMD process must call it
+    with the same (eids, src) so the replicated eid->owner map stays
+    derivable everywhere — only the feature payloads are sharded.
+    """
+
+    n_parts: int = 1
+    d_node: int = 0
+    d_edge: int = 0
+    d_memory: int = 0
+    local_rank: int = 0
+
+    # -- symmetric get/put surface --------------------------------------
+    def put_node_feats(self, ids, feats) -> None:
+        raise NotImplementedError
+
+    def get_node_feats(self, ids) -> np.ndarray:
+        raise NotImplementedError
+
+    def register_edges(self, eids, src) -> None:
+        raise NotImplementedError
+
+    def put_edge_feats(self, eids, feats) -> None:
+        raise NotImplementedError
+
+    def get_edge_feats(self, eids) -> np.ndarray:
+        raise NotImplementedError
+
+    def put_memory(self, ids, mem, ts) -> None:
+        raise NotImplementedError
+
+    def get_memory(self, ids) -> Tuple[np.ndarray, np.ndarray]:
+        """-> (mem (N, d_memory), last-update ts (N,)) — symmetric with
+        ``put_memory``."""
+        raise NotImplementedError
+
+    # -- accounting ------------------------------------------------------
+    def resident_bytes(self) -> int:
+        """Feature + memory bytes THIS process keeps resident (used rows
+        only, not growable-array capacity)."""
+        raise NotImplementedError
+
+    def stats(self) -> Dict[str, Any]:
+        """State-RPC accounting: ``calls``/``bytes``/``wait_s`` cover
+        every partition-remote access (modeled in-process + real wire),
+        ``wire_*`` the cross-process subset, ``served_calls`` requests
+        answered for peers, plus ``resident_bytes``."""
+        raise NotImplementedError
+
+    # -- deprecated pre-redesign names (one-PR shims) --------------------
+    def put_node_features(self, ids, feats) -> None:
+        _deprecated("put_node_features", "put_node_feats")
+        self.put_node_feats(ids, feats)
+
+    def get_node_features(self, ids) -> np.ndarray:
+        _deprecated("get_node_features", "get_node_feats")
+        return self.get_node_feats(ids)
+
+    def put_edge_features(self, eids, src, feats) -> None:
+        _deprecated("put_edge_features(eids, src, feats)",
+                    "register_edges(eids, src) + put_edge_feats(eids, "
+                    "feats)")
+        self.register_edges(eids, src)
+        self.put_edge_feats(eids, feats)
+
+    def get_edge_features(self, eids) -> np.ndarray:
+        _deprecated("get_edge_features", "get_edge_feats")
+        return self.get_edge_feats(eids)
+
+    def get_memory_ts(self, ids) -> np.ndarray:
+        _deprecated("get_memory_ts", "get_memory (returns (mem, ts))")
+        return self.get_memory(ids)[1]
+
+
+# ---------------------------------------------------------------------------
+# Replicated implementation (tier-1 default; today's numerics)
+# ---------------------------------------------------------------------------
+
+
 class FeatureStorePartition:
-    """One machine's feature shard."""
+    """One machine's feature shard (rows indexed by GLOBAL id)."""
 
     def __init__(self, part_id: int, n_parts: int, d_node: int,
                  d_edge: int, d_memory: int = 0):
@@ -64,11 +205,11 @@ class FeatureStorePartition:
         self.mem_ts = _Dense(1) if d_memory else None
 
 
-class DistributedFeatureStore:
-    """Facade over P feature partitions with remote-byte accounting.
-
-    Nodes (and memories) are owned by hash(node) % P; edge features are
-    owned by hash(src) % P (co-located with the edge's graph shard).
+class ReplicatedStateService(StateService):
+    """All P hash partitions hosted in-process; partition-remote access
+    is modeled (call/byte-accounted against ``local_rank``), never a
+    real wire. Nodes (and memories) are owned by hash(node) % P; edge
+    features by hash(src) % P (co-located with the edge's graph shard).
     """
 
     def __init__(self, n_parts: int, d_node: int, d_edge: int,
@@ -79,28 +220,59 @@ class DistributedFeatureStore:
         self.n_parts = n_parts
         self.d_node, self.d_edge, self.d_memory = d_node, d_edge, d_memory
         self.local_rank = local_rank
+        self.remote_calls = 0
         self.remote_bytes = 0
         self._edge_owner = _Dense(1)   # edge id -> owner partition
 
     # -- writes ---------------------------------------------------------
-    def put_node_features(self, ids, feats) -> None:
+    def put_node_feats(self, ids, feats) -> None:
         ids = np.asarray(ids, np.int64)
         own = owner_of(ids, self.n_parts)
         for p in range(self.n_parts):
             sel = own == p
             if sel.any():
                 self.parts[p].node.set(ids[sel], np.asarray(feats)[sel])
+                self._account(p, int(sel.sum()) * self.d_node * 4)
 
-    def put_edge_features(self, eids, src, feats) -> None:
+    def register_edges(self, eids, src) -> None:
         eids = np.asarray(eids, np.int64)
+        if not len(eids):
+            return
         own = owner_of(np.asarray(src, np.int64), self.n_parts)
-        self._edge_owner.set(eids, own[:, None].astype(np.float32))
+        # first registration wins (matches ShardedStateService: an
+        # SPMD re-ingest of an id must be idempotent on the owner map)
+        self._edge_owner._ensure(int(eids.max()) + 1)
+        fresh = ~self._edge_owner.written[eids]
+        self._edge_owner.set(eids[fresh],
+                             own[fresh][:, None].astype(np.float32))
+
+    def put_edge_feats(self, eids, feats) -> None:
+        eids = np.asarray(eids, np.int64)
+        own = self._edge_owner.get(eids)[:, 0].astype(np.int64)
         for p in range(self.n_parts):
             sel = own == p
             if sel.any():
                 self.parts[p].edge.set(eids[sel], np.asarray(feats)[sel])
+                self._account(p, int(sel.sum()) * self.d_edge * 4)
+
+    def put_memory(self, ids, mem, ts) -> None:
+        ids = np.asarray(ids, np.int64)
+        own = owner_of(ids, self.n_parts)
+        for p in range(self.n_parts):
+            sel = own == p
+            if not sel.any():
+                continue
+            self.parts[p].memory.set(ids[sel], np.asarray(mem)[sel])
+            self.parts[p].mem_ts.set(
+                ids[sel], np.asarray(ts)[sel][:, None])
+            self._account(p, int(sel.sum()) * (self.d_memory + 1) * 4)
 
     # -- reads (remote-byte accounted) ----------------------------------
+    def _account(self, p: int, nbytes: int) -> None:
+        if p != self.local_rank:
+            self.remote_calls += 1
+            self.remote_bytes += nbytes
+
     def _fetch(self, table: str, ids: np.ndarray, dim: int) -> np.ndarray:
         ids = np.asarray(ids, np.int64)
         out = np.zeros((len(ids), dim), np.float32)
@@ -114,32 +286,54 @@ class DistributedFeatureStore:
                 continue
             t = getattr(self.parts[p], table)
             out[sel] = t.get(ids[sel])
-            if p != self.local_rank:
-                self.remote_bytes += int(sel.sum()) * dim * 4
+            self._account(p, int(sel.sum()) * dim * 4)
         return out
 
-    def get_node_features(self, ids) -> np.ndarray:
+    def get_node_feats(self, ids) -> np.ndarray:
         return self._fetch("node", ids, self.d_node)
 
-    def get_edge_features(self, eids) -> np.ndarray:
+    def get_edge_feats(self, eids) -> np.ndarray:
         return self._fetch("edge", eids, self.d_edge)
 
-    # -- TGN node memory --------------------------------------------------
-    def get_memory(self, ids) -> np.ndarray:
+    def get_memory(self, ids) -> Tuple[np.ndarray, np.ndarray]:
+        if self.d_memory == 0:
+            raise ValueError("state service configured without a memory "
+                             "table (d_memory=0)")
+        mem = self._fetch("memory", ids, self.d_memory)
+        ts = self._fetch("mem_ts", ids, 1)[:, 0]
+        return mem, ts
+
+    # -- accounting ------------------------------------------------------
+    def resident_bytes(self) -> int:
+        total = 0
+        for part in self.parts:
+            total += part.node.used * self.d_node * 4
+            total += part.edge.used * self.d_edge * 4
+            if part.memory is not None:
+                total += part.memory.used * self.d_memory * 4
+                total += part.mem_ts.used * 4
+        return total
+
+    def stats(self) -> Dict[str, Any]:
+        return {"mode": "replicated",
+                "calls": self.remote_calls, "bytes": self.remote_bytes,
+                "wait_s": 0.0, "wire_calls": 0, "wire_bytes": 0,
+                "served_calls": 0,
+                "resident_bytes": self.resident_bytes()}
+
+
+class DistributedFeatureStore(ReplicatedStateService):
+    """Deprecated pre-redesign name. Keeps the OLD asymmetric surface
+    semantics for one PR — in particular the mem-only ``get_memory``
+    return — so external callers migrate on their own schedule. New
+    code constructs :class:`ReplicatedStateService` (or
+    ``repro.dist.state.ShardedStateService``) directly."""
+
+    def get_memory(self, ids) -> np.ndarray:  # type: ignore[override]
+        _deprecated("DistributedFeatureStore.get_memory (mem-only)",
+                    "StateService.get_memory (returns (mem, ts))")
         return self._fetch("memory", ids, self.d_memory)
 
     def get_memory_ts(self, ids) -> np.ndarray:
+        _deprecated("get_memory_ts", "get_memory (returns (mem, ts))")
         return self._fetch("mem_ts", ids, 1)[:, 0]
-
-    def put_memory(self, ids, mem, ts) -> None:
-        ids = np.asarray(ids, np.int64)
-        own = owner_of(ids, self.n_parts)
-        for p in range(self.n_parts):
-            sel = own == p
-            if not sel.any():
-                continue
-            self.parts[p].memory.set(ids[sel], np.asarray(mem)[sel])
-            self.parts[p].mem_ts.set(
-                ids[sel], np.asarray(ts)[sel][:, None])
-            if p != self.local_rank:
-                self.remote_bytes += int(sel.sum()) * (self.d_memory + 1) * 4

@@ -2,8 +2,9 @@
 batches ("MFG"s, message-flow graphs, following TGL's terminology).
 
 This is the paper's *feature fetching* phase: node/edge features come
-through the device FeatureCache (GNNFlow §4.3) backed by the (possibly
-remote) DistributedFeatureStore; TGN node memories are always fetched
+through the device FeatureCache (GNNFlow §4.3) backed by a (possibly
+owner-sharded, cross-process) ``StateService``
+(``repro.core.feature_store``); TGN node memories are always fetched
 fresh (they mutate every batch — caching them would serve stale state).
 """
 from __future__ import annotations

@@ -127,19 +127,20 @@ class Dispatcher:
             removed += part.graph.delete_edges(eids)
         return removed
 
-    def ingest(self, events, store=None) -> np.ndarray:
+    def ingest(self, events, state=None) -> np.ndarray:
         """One continuous-learning ingest step: dispatch the event
         batch's edges to their owner partitions and (optionally) the
-        node/edge features to the hash-co-located feature store shards —
-        the paper's ingestion front-end in one call. Feature payloads
-        are byte-accounted like the edge dispatch. Returns the global
-        edge ids assigned to the batch (one per event)."""
+        node/edge features to the hash-co-located state service shards
+        (``repro.core.feature_store.StateService``) — the paper's
+        ingestion front-end in one call. Feature payloads are
+        byte-accounted like the edge dispatch. Returns the global edge
+        ids assigned to the batch (one per event)."""
         eids = self.add_edges(events.src, events.dst, events.ts)
-        if store is not None:
+        if state is not None:
             nodes = np.unique(np.concatenate([events.src, events.dst]))
-            store.put_node_features(nodes, events.node_features(nodes))
-            store.put_edge_features(eids, events.src,
-                                    events.edge_features(eids))
+            state.put_node_feats(nodes, events.node_features(nodes))
+            state.register_edges(eids, events.src)
+            state.put_edge_feats(eids, events.edge_features(eids))
             self.bytes_dispatched += (int(nodes.size) * events.d_node
                                       + len(eids) * events.d_edge) * 4
         return eids

@@ -19,8 +19,8 @@ pieces both continuous trainers are built on:
 ``FeatureAssembler``
     ``BatchBuilder``'s feature staging behind a prefetchable
     interface.  ``prefetch`` is the pipelinable part (k-hop sampling +
-    cache/store feature fetch — pure host work against state frozen
-    for the round); ``finalize`` is the late-bound part (TGN
+    cache/StateService feature fetch — pure host work against state
+    frozen for the round); ``finalize`` is the late-bound part (TGN
     raw-message blobs, which must observe the *previous* step's memory
     commit) and therefore runs after the stage-boundary sync.
 

@@ -299,6 +299,11 @@ class TemporalSampler:
         # and our collective can't finish without the peer's step).
         self.device = device
         self._key = jax.random.PRNGKey(seed)
+        # request-keyed derivation base (never advanced): stochastic
+        # hops served for a DISTRIBUTED trainer fold (requesting
+        # machine, request seq, hop) into this so results are
+        # independent of request arrival order across processes
+        self.base_key = self._key
         self._dev = None          # persistent device mirror of the snapshot
         self._dev_version = -1    # snapshot version the mirror reflects
         self._dev_snap = None     # snapshot object the mirror was built
@@ -423,11 +428,28 @@ class TemporalSampler:
         return self._dev
 
     # -- sampling ------------------------------------------------------
+    def request_key(self, req_machine: int, seq: int, hop: int):
+        """Order-independent RNG key for one served stochastic hop:
+        ``fold_in`` of (requesting machine, that requester's request
+        seq, hop index) on this sampler's base key.  The serving
+        sampler is already (machine, rank)-seeded, so the full request
+        coordinate (machine, rank, hop, seq) determines the key and
+        concurrent requesters cannot perturb each other's draws.
+        Returns None for the deterministic ``recent`` policy."""
+        if self.policy not in ("uniform", "window"):
+            return None
+        key = jax.random.fold_in(self.base_key, req_machine)
+        key = jax.random.fold_in(key, seq)
+        return jax.random.fold_in(key, hop)
+
     def _dispatch(self, targets, times, tmask,
-                  fanouts: Optional[Tuple[int, ...]] = None):
+                  fanouts: Optional[Tuple[int, ...]] = None, key=None):
         dev = self._sync_device()
         scan = min(self.scan_pages, self.snap.page_table.shape[1])
-        if self.policy in ("uniform", "window"):
+        if key is not None:
+            sub = key
+        elif self.policy in ("uniform", "window"):
+            # legacy call-order stream (single-host sampling path)
             self._key, sub = jax.random.split(self._key)
         else:
             # deterministic policy: skip the per-call host-side split
@@ -438,14 +460,16 @@ class TemporalSampler:
             policy=self.policy, window=self.window, scan_pages=scan,
             use_pallas=self.use_pallas)
 
-    def sample_hop(self, targets, times, tmask, k: int):
-        """One hop for (padded) targets; returns (nbr, eid, ts, mask)."""
+    def sample_hop(self, targets, times, tmask, k: int, key=None):
+        """One hop for (padded) targets; returns (nbr, eid, ts, mask).
+        ``key`` overrides the sampler-local RNG stream with a
+        request-derived key (see :meth:`request_key`)."""
         with self._on_device():
             targets = jnp.asarray(targets, jnp.int32)
             times = jnp.asarray(times, jnp.float32)
             tmask = jnp.asarray(tmask, bool)
             [(_, _, _, nbr, eid, ts, m)] = self._dispatch(
-                targets, times, tmask, fanouts=(int(k),))
+                targets, times, tmask, fanouts=(int(k),), key=key)
         return nbr, eid, ts, m
 
     def sample(self, seeds, seed_ts) -> List[SampledLayer]:

@@ -84,6 +84,13 @@ class DistributedSamplerSystem:
                 for r in range(n_gpus)]
             self._locks[m] = [threading.Lock() for _ in range(n_gpus)]
         self._load = np.zeros((self.n_machines, n_gpus), np.int64)
+        # per-(requesting machine, rank) request sequence: every SPMD
+        # process advances its own workers' counters at the same program
+        # points, so the (machine, rank, seq, hop) coordinate of any hop
+        # is identical in-process and multihost — the request-keyed RNG
+        # (TemporalSampler.request_key) rides on it. NOT reset by
+        # reset_stats: it tracks program order, not round traffic.
+        self._req_seq: Dict[Tuple[int, int], int] = {}
         self.request_bytes = 0
         self.response_bytes = 0
         self.last_refresh_bytes = 0
@@ -115,23 +122,29 @@ class DistributedSamplerSystem:
 
     # -- hop service (local call or RPC server entry) ----------------------
     def serve_hop(self, machine: int, rank: int, targets: np.ndarray,
-                  times: np.ndarray, pmask: np.ndarray, k: int
+                  times: np.ndarray, pmask: np.ndarray, k: int,
+                  req_machine: int = 0, seq: int = 0, hop: int = 0
                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                              np.ndarray]:
         """One (already pow2-padded) hop on a hosted sampler.  Called
         directly for locally-owned targets and by the RPC sampling
         server on behalf of remote trainers; the per-sampler lock keeps
         the trainer loop and server threads from interleaving on one
-        sampler's device mirror."""
+        sampler's device mirror.  (req_machine, seq, hop) is the
+        request coordinate: stochastic policies derive their RNG key
+        from it (order-independent across serving processes)."""
         worker = self.samplers[machine][rank]
+        key = worker.request_key(req_machine, seq, hop)
         with self._locks[machine][rank]:
-            a, b, c, d = worker.sample_hop(targets, times, pmask, k)
+            a, b, c, d = worker.sample_hop(targets, times, pmask, k,
+                                           key=key)
         return (np.asarray(a), np.asarray(b), np.asarray(c),
                 np.asarray(d))
 
     def _route_hop(self, trainer_machine: int, rank: int,
                    targets: np.ndarray, times: np.ndarray,
-                   tmask: np.ndarray, k: int):
+                   tmask: np.ndarray, k: int, seq: int = 0,
+                   hop: int = 0):
         """Route one hop's targets to their owners (static schedule)."""
         N = len(targets)
         nbr = np.full((N, k), NULL, np.int32)
@@ -159,10 +172,13 @@ class DistributedSamplerSystem:
             pmask[:n_sel] = True
             if m in self.samplers:
                 a, b, c, d = self.serve_hop(m, rank, targets[idx_p],
-                                            times[idx_p], pmask, k)
+                                            times[idx_p], pmask, k,
+                                            req_machine=trainer_machine,
+                                            seq=seq, hop=hop)
             else:
                 a, b, c, d = self.transport.sample_hop(
-                    m, rank, targets[idx_p], times[idx_p], pmask, k)
+                    m, rank, targets[idx_p], times[idx_p], pmask, k,
+                    req_machine=trainer_machine, seq=seq, hop=hop)
             nbr[idx] = np.asarray(a)[:n_sel]
             eid[idx] = np.asarray(b)[:n_sel]
             ts[idx] = np.asarray(c)[:n_sel]
@@ -177,10 +193,13 @@ class DistributedSamplerSystem:
         targets = np.asarray(seeds, np.int64)
         times = np.asarray(seed_ts, np.float32)
         tmask = np.ones(len(targets), bool)
+        seq = self._req_seq.get((trainer_machine, rank), 0)
+        self._req_seq[(trainer_machine, rank)] = seq + 1
         layers: List[SampledLayer] = []
-        for k in self.fanouts:
+        for hop, k in enumerate(self.fanouts):
             nbr, eid, ts, msk = self._route_hop(
-                trainer_machine, rank, targets, times, tmask, k)
+                trainer_machine, rank, targets, times, tmask, k,
+                seq=seq, hop=hop)
             layers.append(SampledLayer(
                 dst_nodes=targets.astype(np.int32),
                 dst_times=times, dst_mask=tmask.copy(),

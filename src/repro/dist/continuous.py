@@ -48,12 +48,19 @@ hosts one graph partition + its rank samplers, serves them to peers
 over an RPC sampling server, fetches remote hops over the wire, and
 the shard_map collectives run across processes on the global
 ``jax.distributed`` mesh (gloo CPU collectives in-container).  Graph
-state is genuinely partitioned; features and TGN memories are
-replicated per process at this scale (each process derives identical
-replicas from the deterministic ingest + the replicated step), which
-keeps the numerics bit-comparable to the in-process run.  Ingest is
+state is genuinely partitioned; features and TGN memories go through
+the ``StateService`` API (``repro.core.feature_store``): with
+``state="replicated"`` (the default) every process derives identical
+replicas from the deterministic ingest + the replicated step, which
+keeps the numerics bit-comparable to the in-process run; with
+``state="sharded"`` each process holds ONLY its owned feature/memory
+partitions (``repro.dist.state.ShardedStateService``) and remote rows
+travel over the transport's ``feat_get``/``mem_put``-style state ops,
+with the FeatureCache absorbing the remote read latency.  Ingest is
 bracketed by coordination-service barriers: remote samplers read the
-partition state it mutates.
+partition state it mutates; the sharded-memory commit adds read/commit
+fences so no owner overwrites step t-1's memory while a peer still
+reads it.
 """
 from __future__ import annotations
 
@@ -92,6 +99,13 @@ class DistRoundMetrics(RoundMetrics):
     rpc_calls: int = 0
     rpc_wire_bytes: int = 0     # pickled request+response bytes
     rpc_wait_s: float = 0.0     # client-side blocking on remote hops
+    # state-service traffic (feature/memory get/put through the
+    # StateService API): modeled calls for the replicated service,
+    # modeled + real wire for the sharded one
+    state_calls: int = 0
+    state_bytes: int = 0
+    state_wait_s: float = 0.0   # client-side blocking on state RPCs
+    state_resident_bytes: int = 0   # per-process resident table bytes
 
 
 def _unstack(tree):
@@ -112,11 +126,15 @@ class DistributedContinuousTrainer(ContinuousTrainer):
                  cache_policy: str = "lru", lam: float = 0.2,
                  use_pallas: bool = False, lr: float = 1e-3,
                  seed: int = 0, overlap: bool = True,
-                 transport: Optional[SamplingTransport] = None):
+                 transport: Optional[SamplingTransport] = None,
+                 state: str = "replicated"):
+        if state not in ("replicated", "sharded"):
+            raise ValueError(f"unknown state mode {state!r}")
         self.dist = dist if dist is not None else DistConfig()
         self.transport = transport if transport is not None \
             else LocalTransport()
         self.multihost = self.transport.n_processes > 1
+        self.state_mode = state
         super().__init__(cfg, stream, threshold=threshold,
                          cache_ratio=cache_ratio,
                          cache_policy=cache_policy, lam=lam,
@@ -178,6 +196,23 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         self.transport.connect()
         self.transport.barrier("rpc-up")
 
+    def _make_state(self):
+        if self.state_mode == "replicated":
+            return super()._make_state()
+        from repro.dist.state import ShardedStateService
+        cfg = self.cfg
+        svc = ShardedStateService(
+            self.dist.n_machines, d_node=cfg.d_node, d_edge=cfg.d_edge,
+            d_memory=cfg.d_memory if cfg.use_memory else 0,
+            hosted=self.transport.local_machines(self.dist.n_machines),
+            transport=self.transport,
+            local_rank=self.transport.process_id)
+        # expose the hosted shards to peer processes; the first remote
+        # state access happens after the pre-ingest barrier, long after
+        # every fleet member has bound its state here
+        self.transport.bind_state(svc)
+        return svc
+
     def _init_dist_state(self) -> None:
         dist = self.dist
         W = dist.n_workers
@@ -186,7 +221,7 @@ class DistributedContinuousTrainer(ContinuousTrainer):
             # global array on the distributed mesh. Params/opt state are
             # replicated (identical on all processes — same init seed),
             # the error-feedback residual is dp-sharded like the batch.
-            self.store.local_rank = self.transport.process_id
+            self.state.local_rank = self.transport.process_id
             self.params = self._replicated(self.params)
             self.opt_state = self._replicated(self.opt_state)
         # per-worker error-feedback residual, only for the lossy
@@ -360,13 +395,13 @@ class DistributedContinuousTrainer(ContinuousTrainer):
     # -- feature fetch (device cache in front of the sharded store) -------
     def _fetch_node(self, ids):
         out = self.node_cache.fetch(
-            ids, lambda miss: self.store.get_node_features(miss))
+            ids, lambda miss: self.state.get_node_feats(miss))
         self._account_cache(0, ids, self.node_cache.last_hit)
         return out
 
     def _fetch_edge(self, eids):
         out = self.edge_cache.fetch(
-            eids, lambda miss: self.store.get_edge_features(miss))
+            eids, lambda miss: self.state.get_edge_feats(miss))
         self._account_cache(1, eids, self.edge_cache.last_hit)
         return out
 
@@ -492,6 +527,29 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         batch = self._sharded_batch(staged)
         return self._dist_eval(self.params, batch)
 
+    # -- TGN memory fences (sharded multihost only) ------------------------
+    def _cross_process_memory(self) -> bool:
+        return (self.multihost and self.state_mode == "sharded"
+                and self.cfg.use_memory)
+
+    def _memory_fence(self):
+        # commit_and_stage READS step t-1's memory for the pending set
+        # then WRITES step t's values; with cross-process shards every
+        # process must finish the read before any owner overwrites its
+        # rows.  The pending set derives from replicated host state, so
+        # every process reaches the fence the same number of times.
+        if not self._cross_process_memory():
+            return None
+        return lambda: self.transport.barrier("mem-read")
+
+    def _complete_train(self, loss, item) -> float:
+        loss = super()._complete_train(loss, item)
+        if self._cross_process_memory():
+            # nobody gathers batch t+1's memory until every owner has
+            # committed batch t's writes into its shard
+            self.transport.barrier("mem-commit")
+        return loss
+
     # -- public API --------------------------------------------------------
     def ingest(self, batch: EventStream) -> float:
         """Dispatch the incremental batch to owner partitions + feature
@@ -504,7 +562,7 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         (post)."""
         t0 = time.perf_counter()
         self.transport.barrier("pre-ingest")
-        eids = self.dispatcher.ingest(batch, self.store)
+        eids = self.dispatcher.ingest(batch, self.state)
         self.events.append(batch.ts, eids)
         self._last_eids = eids
         self._refresh_bytes += self.samplers.refresh()
@@ -523,17 +581,24 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         self._part_hits[:] = 0
         self._part_accesses[:] = 0
         self._rpc_base = self.transport.stats()
+        self._state_base = self.state.stats()
 
     def _round_metrics(self, ev, last_loss, train_s) -> DistRoundMetrics:
         st = self.samplers.load_stats()
         rt = self.transport.stats()
         base = getattr(self, "_rpc_base", None) or {}
+        ss = self.state.stats()
+        sbase = getattr(self, "_state_base", None) or {}
         return DistRoundMetrics(
             rpc_calls=rt["calls"] - base.get("calls", 0),
             rpc_wire_bytes=(rt["bytes_out"] + rt["bytes_in"]
                             - base.get("bytes_out", 0)
                             - base.get("bytes_in", 0)),
             rpc_wait_s=rt["wait_s"] - base.get("wait_s", 0.0),
+            state_calls=ss["calls"] - sbase.get("calls", 0),
+            state_bytes=ss["bytes"] - sbase.get("bytes", 0),
+            state_wait_s=ss["wait_s"] - sbase.get("wait_s", 0.0),
+            state_resident_bytes=ss["resident_bytes"],
             ap=ev["ap"], auc_like=ev["acc"], loss=last_loss,
             eval_loss=ev["loss"],
             ingest_s=self.timers["ingest"],

@@ -1,0 +1,376 @@
+"""Owner-sharded state service (GNNFlow's hybrid placement, §4.4).
+
+The paper keeps node/edge features and TGN memories WHERE their
+partition lives; a process holds only its own shard and absorbs remote
+reads with the dynamic cache.  :class:`ShardedStateService` is that
+placement behind the :class:`repro.core.feature_store.StateService`
+protocol:
+
+* a process hosts the partitions in ``hosted`` (its own machine under
+  ``repro.launch.multihost``; all of them in the in-process mode) in
+  COMPACT local rows — node/memory row ``id // P`` (a bijection with
+  owner ``id % P``), edge rows assigned per owner in ascending-eid
+  order at ``register_edges`` time.  Resident bytes are therefore ~1/P
+  of a full replica (``resident_bytes``, used-rows-based);
+* an access whose owner is hosted but != ``local_rank`` is a MODELED
+  remote (call/byte-accounted, same as the replicated service) — the
+  in-process trainer stays a faithful cost model;
+* an access whose owner is NOT hosted goes over the transport's state
+  ops (``feat_get``/``feat_put``/``mem_get``/``mem_put``,
+  ``repro.dist.transport``) to the owner process's server, with real
+  wire bytes/wait accounted, and errors re-raised on the caller;
+* ``spmd_writes=True`` (the trainers' mode) DROPS non-hosted writes:
+  every process runs the same deterministic ingest/commit, so the
+  owner derives its own copy locally and the wire carries only reads.
+  ``spmd_writes=False`` routes writes remotely too (non-SPMD callers,
+  property tests).
+
+``register_edges`` is SPMD metadata either way: every process calls it
+with the same (eids, src) stream, so the replicated eid -> owner map
+(and the owner's row assignment) stays derivable everywhere while only
+feature payloads are sharded.
+
+Numerics: reads return exactly what the replicated service would (the
+owner's copy IS the replica's value under SPMD writes), so swapping
+``ReplicatedStateService`` for this class changes footprint and
+traffic, not results — the parity harness (tests/test_multihost.py,
+tests/test_state_service.py) pins sharded == replicated through full
+training rounds, TGN memory path included.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.feature_store import StateService, _Dense
+from repro.core.partition import owner_of
+
+
+class _Shard:
+    """One hosted partition's compact tables."""
+
+    def __init__(self, d_node: int, d_edge: int, d_memory: int):
+        self.node = _Dense(d_node)
+        self.edge = _Dense(d_edge)
+        self.memory = _Dense(d_memory) if d_memory else None
+        self.mem_ts = _Dense(1) if d_memory else None
+        self.edge_rows = 0          # next free owner-local edge row
+
+
+class ShardedStateService(StateService):
+    def __init__(self, n_parts: int, d_node: int, d_edge: int,
+                 d_memory: int = 0, *,
+                 hosted: Optional[Iterable[int]] = None,
+                 transport=None, local_rank: int = 0,
+                 spmd_writes: bool = True):
+        self.n_parts = int(n_parts)
+        self.d_node, self.d_edge, self.d_memory = d_node, d_edge, d_memory
+        self.shards: Dict[int, _Shard] = {
+            int(p): _Shard(d_node, d_edge, d_memory)
+            for p in (hosted if hosted is not None else range(n_parts))}
+        self.transport = transport
+        self.local_rank = int(local_rank)
+        self.spmd_writes = bool(spmd_writes)
+        # replicated edge metadata (every SPMD process derives the same)
+        self._edge_owner = np.full(1024, -1, np.int16)
+        self._edge_row = np.full(1024, -1, np.int64)
+        # modeled (hosted-but-foreign) + wire (non-hosted) accounting
+        self.model_calls = 0
+        self.model_bytes = 0
+        self.wire_calls = 0
+        self.wire_bytes = 0
+        self.wire_wait_s = 0.0
+        self.served_calls = 0
+
+    # -- edge metadata ---------------------------------------------------
+    def _ensure_edge_meta(self, n: int) -> None:
+        if n <= len(self._edge_owner):
+            return
+        grow = max(int(len(self._edge_owner) * 1.5), n)
+        for name in ("_edge_owner", "_edge_row"):
+            arr = getattr(self, name)
+            g = np.full(grow, -1, arr.dtype)
+            g[:len(arr)] = arr
+            setattr(self, name, g)
+
+    def register_edges(self, eids, src) -> None:
+        """Record owner + owner-local row for new eids (assumed unique
+        within a call, as the ingest path guarantees). Rows are assigned
+        in ascending-eid order per owner, so every process that hosts a
+        partition derives the identical row map."""
+        eids = np.asarray(eids, np.int64)
+        src = np.asarray(src, np.int64)
+        if not len(eids):
+            return
+        order = np.argsort(eids, kind="stable")
+        eids, src = eids[order], src[order]
+        self._ensure_edge_meta(int(eids.max()) + 1)
+        own = owner_of(src, self.n_parts).astype(np.int16)
+        fresh = self._edge_owner[eids] < 0
+        self._edge_owner[eids[fresh]] = own[fresh]
+        for p, shard in self.shards.items():
+            sel = fresh & (own == p)
+            k = int(sel.sum())
+            if k:
+                self._edge_row[eids[sel]] = shard.edge_rows + np.arange(k)
+                shard.edge_rows += k
+
+    def _owners(self, table: str, ids: np.ndarray) -> np.ndarray:
+        """Per-id owner partition; -1 for padding/unregistered ids."""
+        if table == "edge":
+            self._ensure_edge_meta(int(ids.max(initial=0)) + 1)
+            own = self._edge_owner[np.maximum(ids, 0)].astype(np.int64)
+        else:
+            own = owner_of(np.maximum(ids, 0), self.n_parts)
+        return np.where(ids >= 0, own, -1)
+
+    # -- hosted-shard primitives ----------------------------------------
+    def _local_rows(self, p: int, table: str, ids: np.ndarray
+                    ) -> np.ndarray:
+        if table == "edge":
+            return self._edge_row[ids]          # -1 -> zeros on get
+        return ids // self.n_parts              # owner p == ids % P
+
+    def _local_get(self, p: int, table: str, ids: np.ndarray
+                   ) -> np.ndarray:
+        shard = self.shards[p]
+        return getattr(shard, table).get(self._local_rows(p, table, ids))
+
+    def _local_put(self, p: int, table: str, ids: np.ndarray,
+                   vals: np.ndarray) -> None:
+        rows = self._local_rows(p, table, ids)
+        if table == "edge" and (rows < 0).any():
+            missing = ids[rows < 0][:8]
+            raise ValueError(
+                f"put_edge_feats for unregistered eids {missing.tolist()}"
+                f" — call register_edges(eids, src) first")
+        getattr(self.shards[p], table).set(rows, vals)
+
+    def _account_model(self, p: int, *arrays) -> None:
+        if p != self.local_rank:
+            self.model_calls += 1
+            self.model_bytes += sum(int(a.nbytes) for a in arrays)
+
+    def _wire(self, fn, *arrays):
+        if self.transport is None:
+            raise RuntimeError(
+                "partition not hosted here and no transport bound")
+        t0 = time.perf_counter()
+        out = fn()
+        self.wire_wait_s += time.perf_counter() - t0
+        self.wire_calls += 1
+        nbytes = sum(int(a.nbytes) for a in arrays)
+        if out is not None:
+            res = out if isinstance(out, tuple) else (out,)
+            nbytes += sum(int(np.asarray(a).nbytes) for a in res)
+        self.wire_bytes += nbytes
+        return out
+
+    # -- feature reads ---------------------------------------------------
+    def _read(self, table: str, ids, dim: int) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        out = np.zeros((len(ids), dim), np.float32)
+        if not len(ids):
+            return out
+        own = self._owners(table, ids)
+        for p in np.unique(own):
+            p = int(p)
+            if p < 0:
+                continue
+            sel = own == p
+            sub = ids[sel]
+            if p in self.shards:
+                vals = self._local_get(p, table, sub)
+                self._account_model(p, sub, vals)
+            else:
+                vals = self._wire(
+                    lambda: self.transport.feat_get(p, table, sub), sub)
+            out[sel] = vals
+        return out
+
+    def get_node_feats(self, ids) -> np.ndarray:
+        return self._read("node", ids, self.d_node)
+
+    def get_edge_feats(self, eids) -> np.ndarray:
+        return self._read("edge", eids, self.d_edge)
+
+    # -- feature writes --------------------------------------------------
+    def _write(self, table: str, ids, vals) -> None:
+        ids = np.asarray(ids, np.int64)
+        vals = np.asarray(vals, np.float32)
+        if not len(ids):
+            return
+        own = self._owners(table, ids)
+        for p in np.unique(own):
+            p = int(p)
+            if p < 0:
+                continue
+            sel = own == p
+            sub, v = ids[sel], vals[sel]
+            if p in self.shards:
+                self._local_put(p, table, sub, v)
+                self._account_model(p, sub, v)
+            elif self.spmd_writes:
+                # the owner process runs the same deterministic write
+                # from its own replicated computation — drop, no wire
+                continue
+            else:
+                self._wire(
+                    lambda: self.transport.feat_put(p, table, sub, v),
+                    sub, v)
+
+    def put_node_feats(self, ids, feats) -> None:
+        self._write("node", ids, feats)
+
+    def put_edge_feats(self, eids, feats) -> None:
+        self._write("edge", eids, feats)
+
+    # -- TGN memory ------------------------------------------------------
+    def _require_memory(self) -> None:
+        if not self.d_memory:
+            raise ValueError("state service configured without a memory "
+                             "table (d_memory=0)")
+
+    def get_memory(self, ids) -> Tuple[np.ndarray, np.ndarray]:
+        self._require_memory()
+        ids = np.asarray(ids, np.int64)
+        mem = np.zeros((len(ids), self.d_memory), np.float32)
+        ts = np.zeros(len(ids), np.float32)
+        if not len(ids):
+            return mem, ts
+        own = self._owners("memory", ids)
+        for p in np.unique(own):
+            p = int(p)
+            if p < 0:
+                continue
+            sel = own == p
+            sub = ids[sel]
+            if p in self.shards:
+                rows = sub // self.n_parts
+                m = self.shards[p].memory.get(rows)
+                t = self.shards[p].mem_ts.get(rows)[:, 0]
+                self._account_model(p, sub, m, t)
+            else:
+                m, t = self._wire(
+                    lambda: self.transport.mem_get(p, sub), sub)
+            mem[sel] = m
+            ts[sel] = t
+        return mem, ts
+
+    def put_memory(self, ids, mem, ts) -> None:
+        self._require_memory()
+        ids = np.asarray(ids, np.int64)
+        mem = np.asarray(mem, np.float32)
+        ts = np.asarray(ts, np.float64)
+        if not len(ids):
+            return
+        own = self._owners("memory", ids)
+        for p in np.unique(own):
+            p = int(p)
+            if p < 0:
+                continue
+            sel = own == p
+            sub, m, t = ids[sel], mem[sel], ts[sel]
+            if p in self.shards:
+                rows = sub // self.n_parts
+                self.shards[p].memory.set(rows, m)
+                self.shards[p].mem_ts.set(rows, t[:, None])
+                self._account_model(p, sub, m, t)
+            elif self.spmd_writes:
+                continue
+            else:
+                self._wire(
+                    lambda: self.transport.mem_put(p, sub, m, t),
+                    sub, m, t)
+
+    # -- server-side entry points (transport op handlers) ----------------
+    def _check_hosted(self, own: np.ndarray) -> None:
+        bad = sorted(int(p) for p in np.unique(own)
+                     if p >= 0 and int(p) not in self.shards)
+        if bad:
+            raise RuntimeError(
+                f"state server hosts partitions "
+                f"{sorted(self.shards)} but was asked for {bad} "
+                f"(routing bug or stale owner map on the caller)")
+
+    def serve_feat_get(self, table: str, ids) -> np.ndarray:
+        self.served_calls += 1
+        ids = np.asarray(ids, np.int64)
+        dim = self.d_node if table == "node" else self.d_edge
+        out = np.zeros((len(ids), dim), np.float32)
+        own = self._owners(table, ids)
+        self._check_hosted(own)
+        for p in np.unique(own):
+            if p < 0:
+                continue
+            sel = own == p
+            out[sel] = self._local_get(int(p), table, ids[sel])
+        return out
+
+    def serve_feat_put(self, table: str, ids, vals) -> None:
+        self.served_calls += 1
+        ids = np.asarray(ids, np.int64)
+        vals = np.asarray(vals, np.float32)
+        own = self._owners(table, ids)
+        self._check_hosted(own)
+        for p in np.unique(own):
+            if p < 0:
+                continue
+            sel = own == p
+            self._local_put(int(p), table, ids[sel], vals[sel])
+
+    def serve_mem_get(self, ids) -> Tuple[np.ndarray, np.ndarray]:
+        self.served_calls += 1
+        self._require_memory()
+        ids = np.asarray(ids, np.int64)
+        own = self._owners("memory", ids)
+        self._check_hosted(own)
+        mem = np.zeros((len(ids), self.d_memory), np.float32)
+        ts = np.zeros(len(ids), np.float32)
+        for p in np.unique(own):
+            if p < 0:
+                continue
+            sel = own == p
+            rows = ids[sel] // self.n_parts
+            mem[sel] = self.shards[int(p)].memory.get(rows)
+            ts[sel] = self.shards[int(p)].mem_ts.get(rows)[:, 0]
+        return mem, ts
+
+    def serve_mem_put(self, ids, mem, ts) -> None:
+        self.served_calls += 1
+        self._require_memory()
+        ids = np.asarray(ids, np.int64)
+        mem = np.asarray(mem, np.float32)
+        ts = np.asarray(ts, np.float64)
+        own = self._owners("memory", ids)
+        self._check_hosted(own)
+        for p in np.unique(own):
+            if p < 0:
+                continue
+            sel = own == p
+            rows = ids[sel] // self.n_parts
+            self.shards[int(p)].memory.set(rows, mem[sel])
+            self.shards[int(p)].mem_ts.set(rows, ts[sel][:, None])
+
+    # -- accounting ------------------------------------------------------
+    def resident_bytes(self) -> int:
+        total = 0
+        for shard in self.shards.values():
+            total += shard.node.used * self.d_node * 4
+            total += shard.edge.used * self.d_edge * 4
+            if shard.memory is not None:
+                total += shard.memory.used * self.d_memory * 4
+                total += shard.mem_ts.used * 4
+        return total
+
+    def stats(self) -> Dict[str, Any]:
+        return {"mode": "sharded",
+                "calls": self.model_calls + self.wire_calls,
+                "bytes": self.model_bytes + self.wire_bytes,
+                "wait_s": round(self.wire_wait_s, 6),
+                "wire_calls": self.wire_calls,
+                "wire_bytes": self.wire_bytes,
+                "served_calls": self.served_calls,
+                "resident_bytes": self.resident_bytes()}

@@ -1,39 +1,53 @@
-"""Sampling transports: in-process mirror vs cross-process RPC.
+"""Cross-process transports: sampling hops + state service over RPC.
 
 GNNFlow's distributed loop routes every k-hop request to the owner
-machine's same-rank sampler (the static schedule, §4.4).  *Where* that
-sampler lives is a transport concern, injected into
-``repro.core.scheduler.DistributedSamplerSystem``:
+machine's same-rank sampler (the static schedule, §4.4), and — with the
+PR-6 ``ShardedStateService`` — every partition-remote feature/memory
+access to the owner process's state shard.  *Where* an owner lives is a
+transport concern, injected into
+``repro.core.scheduler.DistributedSamplerSystem`` and
+``repro.dist.state.ShardedStateService``:
 
 ``LocalTransport``
     The degenerate single-process case (and the default): every machine
-    is hosted in this process, hops are direct in-process calls.  This
-    is exactly the pre-multihost behavior — the trainer, the schedule
-    and the byte accounting are unchanged.
+    is hosted in this process, hops and state accesses are direct
+    in-process calls.  This is exactly the pre-multihost behavior — the
+    trainer, the schedule and the byte accounting are unchanged.
 
 ``RpcTransport``
     One OS process per machine (``repro.launch.multihost``).  Each
     process runs an ``RpcSamplingServer`` exposing its *local* machine's
-    per-rank samplers over ``multiprocessing.connection`` (TCP on
-    loopback for the in-container launch; the protocol is
-    length-prefixed pickled tuples, so real wire bytes are counted, not
-    modeled).  A hop whose owner is remote blocks on the owner process's
-    server; the server handles requests on daemon threads, so every
-    process keeps serving its peers while its own trainer loop runs.
+    per-rank samplers AND (when bound via ``bind_state``) its state
+    shard over ``multiprocessing.connection`` (TCP on loopback for the
+    in-container launch; the protocol is length-prefixed pickled tuples,
+    so real wire bytes are counted, not modeled).  A request whose owner
+    is remote blocks on the owner process's server; the server handles
+    requests on daemon threads, so every process keeps serving its
+    peers while its own trainer loop runs.
 
-Determinism note: the ``recent`` policy is stateless per hop, so serving
-order cannot change results — the cross-process run reproduces the
-in-process schedule bit for bit.  Stochastic policies (``uniform`` /
-``window``) advance a per-sampler RNG per call; their results depend on
-request arrival order, which is nondeterministic across processes.  The
-parity harness therefore pins ``recent`` (the paper's default for
-TGN/TGAT); per-sampler locks keep concurrent access safe either way.
+Every RPC op — ``hop``, ``ping``, ``close``, and the state ops
+``feat_get``/``feat_put``/``mem_get``/``mem_put`` — lives in ONE
+registered op table (:data:`OPS`) shared by server dispatch and client
+validation, so the two sides cannot drift: a client call with an
+unregistered op fails locally, and a server receiving one (version
+skew, corrupted frame) replies an error that re-raises on the caller.
+Ops carry a stats group (``sample`` vs ``state``) so the transport
+reports sampling and state traffic separately.
 
-A ``barrier(tag)`` rounds out the interface: ingest mutates graph +
-snapshot state that remote samplers read, so the trainer brackets it
-with barriers.  The RPC transport uses the ``jax.distributed``
-coordination service (pure host-side, no device work); the local
-transport's barrier is a no-op.
+Determinism note: the ``recent`` policy is stateless per hop, so
+serving order cannot change results.  Stochastic policies (``uniform``
+/ ``window``) derive their key per REQUEST — ``fold_in`` over
+(requesting machine, request seq, hop) on the serving sampler's base
+key (``repro.core.sampling``) — so results are independent of request
+arrival order across serving processes and the cross-process run
+reproduces the in-process schedule bit for bit for every policy.
+Per-sampler locks keep concurrent access safe either way.
+
+A ``barrier(tag)`` rounds out the interface: ingest (and the sharded
+TGN memory commit) mutate state that remote peers read, so the trainer
+brackets those points with barriers.  The RPC transport uses the
+``jax.distributed`` coordination service (pure host-side, no device
+work); the local transport's barrier is a no-op.
 """
 from __future__ import annotations
 
@@ -41,16 +55,112 @@ import pickle
 import threading
 import time
 from multiprocessing.connection import Client, Listener
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 _AUTHKEY = b"repro-multihost"
 _OK, _ERR = "ok", "err"
+_CLOSE = object()      # op-handler sentinel: tear down this connection
+
+
+# ---------------------------------------------------------------------------
+# Registered op table (single source of truth for server AND client)
+# ---------------------------------------------------------------------------
+
+
+class OpTable:
+    """Name -> (handler, stats group). The server dispatches through it;
+    the client validates against it before sending, so an op that is
+    not registered here simply does not exist on either side."""
+
+    def __init__(self):
+        self._handlers: Dict[str, Callable] = {}
+        self._groups: Dict[str, str] = {}
+
+    def register(self, name: str, group: str = "sample"):
+        def deco(fn):
+            assert name not in self._handlers, f"duplicate rpc op {name}"
+            self._handlers[name] = fn
+            self._groups[name] = group
+            return fn
+        return deco
+
+    def __contains__(self, name) -> bool:
+        return name in self._handlers
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._handlers))
+
+    def group(self, name: str) -> str:
+        return self._groups[name]
+
+    def dispatch(self, server: "RpcSamplingServer", name: str, payload):
+        try:
+            handler = self._handlers[name]
+        except KeyError:
+            raise ValueError(f"unknown rpc op {name!r} "
+                             f"(registered: {self.names()})") from None
+        return handler(server, *payload)
+
+
+OPS = OpTable()
+
+
+@OPS.register("ping", group="control")
+def _op_ping(server):
+    return "pong"
+
+
+@OPS.register("close", group="control")
+def _op_close(server):
+    return _CLOSE
+
+
+@OPS.register("hop", group="sample")
+def _op_hop(server, machine, rank, targets, times, pmask, k,
+            req_machine=0, seq=0, hop=0):
+    if server.system is None:
+        raise RuntimeError("no sampler system bound on this server")
+    return server.system.serve_hop(machine, rank, targets, times, pmask,
+                                   k, req_machine=req_machine, seq=seq,
+                                   hop=hop)
+
+
+def _state_of(server):
+    if server.state is None:
+        raise RuntimeError("no state service bound on this server "
+                           "(bind_state was never called)")
+    return server.state
+
+
+@OPS.register("feat_get", group="state")
+def _op_feat_get(server, table, ids):
+    return _state_of(server).serve_feat_get(table, ids)
+
+
+@OPS.register("feat_put", group="state")
+def _op_feat_put(server, table, ids, vals):
+    return _state_of(server).serve_feat_put(table, ids, vals)
+
+
+@OPS.register("mem_get", group="state")
+def _op_mem_get(server, ids):
+    return _state_of(server).serve_mem_get(ids)
+
+
+@OPS.register("mem_put", group="state")
+def _op_mem_put(server, ids, mem, ts):
+    return _state_of(server).serve_mem_put(ids, mem, ts)
+
+
+# ---------------------------------------------------------------------------
+# Transport interface
+# ---------------------------------------------------------------------------
 
 
 class SamplingTransport:
-    """Interface the scheduler routes remote hops through."""
+    """Interface the scheduler and the state service route through."""
 
     process_id: int = 0
     n_processes: int = 1
@@ -62,13 +172,38 @@ class SamplingTransport:
     def bind(self, system) -> None:
         """Attach the locally hosted sampler system (starts servers)."""
 
+    def bind_state(self, state) -> None:
+        """Attach the locally hosted state service to the same server
+        (no-op in-process: every partition is already local)."""
+
     def connect(self) -> None:
-        """Dial every peer's sampling server (retry until up)."""
+        """Dial every peer's server (retry until up)."""
 
     def sample_hop(self, machine: int, rank: int, targets: np.ndarray,
-                   times: np.ndarray, pmask: np.ndarray, k: int):
+                   times: np.ndarray, pmask: np.ndarray, k: int,
+                   req_machine: int = 0, seq: int = 0, hop: int = 0):
         raise NotImplementedError(
             "local transport never routes a remote hop")
+
+    # -- state ops (ShardedStateService's wire; owners are local with
+    # -- LocalTransport, so these are never reached in-process) ---------
+    def feat_get(self, machine: int, table: str, ids: np.ndarray):
+        raise NotImplementedError(
+            "local transport never routes a remote state read")
+
+    def feat_put(self, machine: int, table: str, ids: np.ndarray,
+                 vals: np.ndarray):
+        raise NotImplementedError(
+            "local transport never routes a remote state write")
+
+    def mem_get(self, machine: int, ids: np.ndarray):
+        raise NotImplementedError(
+            "local transport never routes a remote state read")
+
+    def mem_put(self, machine: int, ids: np.ndarray, mem: np.ndarray,
+                ts: np.ndarray):
+        raise NotImplementedError(
+            "local transport never routes a remote state write")
 
     def barrier(self, tag: str) -> None:
         pass
@@ -77,7 +212,8 @@ class SamplingTransport:
         pass
 
     def stats(self) -> Dict[str, Any]:
-        return {"calls": 0, "bytes_out": 0, "bytes_in": 0, "wait_s": 0.0}
+        return {"calls": 0, "bytes_out": 0, "bytes_in": 0, "wait_s": 0.0,
+                "state_calls": 0, "state_bytes": 0, "state_wait_s": 0.0}
 
 
 class LocalTransport(SamplingTransport):
@@ -85,18 +221,22 @@ class LocalTransport(SamplingTransport):
 
 
 class RpcSamplingServer:
-    """Serves one process's local samplers to its peers.
+    """Serves one process's local samplers (and state shard) to peers.
 
     Accept loop + one handler thread per peer connection (all daemon):
-    requests are ``(op, payload)`` pickles — ``hop`` dispatches into
+    requests are ``(op, payload)`` pickles dispatched through the
+    registered op table (:data:`OPS`) — ``hop`` into
     ``DistributedSamplerSystem.serve_hop`` (per-sampler locks inside),
-    ``ping`` answers readiness probes.  Errors are pickled back and
-    re-raised on the caller, so a crashing peer surfaces instead of
-    hanging the fleet.
+    the state ops into the bound ``ShardedStateService``, ``ping``
+    answers readiness probes.  Errors are pickled back and re-raised on
+    the caller, so a crashing peer surfaces instead of hanging the
+    fleet.
     """
 
-    def __init__(self, system, port: int, authkey: bytes = _AUTHKEY):
+    def __init__(self, system, port: int, authkey: bytes = _AUTHKEY,
+                 state=None):
         self.system = system
+        self.state = state
         self.listener = Listener(("127.0.0.1", port), authkey=authkey)
         self._closing = False
         self._accept = threading.Thread(target=self._accept_loop,
@@ -129,14 +269,9 @@ class RpcSamplingServer:
                     # caller), not kill this thread and leave the peer
                     # with a bare EOFError
                     op, payload = pickle.loads(raw)
-                    if op == "close":
+                    out = OPS.dispatch(self, op, payload)
+                    if out is _CLOSE:
                         return
-                    if op == "hop":
-                        out = self.system.serve_hop(*payload)
-                    elif op == "ping":
-                        out = "pong"
-                    else:
-                        raise ValueError(f"unknown rpc op {op!r}")
                     reply = (_OK, out)
                 except Exception as e:  # surface on the caller
                     reply = (_ERR, f"{type(e).__name__}: {e}")
@@ -155,11 +290,13 @@ class RpcSamplingServer:
 
 
 class RpcTransport(SamplingTransport):
-    """One machine per process; remote hops go over loopback TCP.
+    """One machine per process; remote requests go over loopback TCP.
 
-    ``ports[m]`` is machine *m*'s sampling-server port.  ``barrier``
-    rides the jax.distributed coordination service already set up by
+    ``ports[m]`` is machine *m*'s server port.  ``barrier`` rides the
+    jax.distributed coordination service already set up by
     ``repro.launch.multihost`` — no device work, pure host sync.
+    Traffic is accounted per op group (``sample`` vs ``state``) on top
+    of the flat totals.
     """
 
     def __init__(self, process_id: int, n_processes: int,
@@ -181,6 +318,7 @@ class RpcTransport(SamplingTransport):
         self.bytes_out = 0
         self.bytes_in = 0
         self.wait_s = 0.0
+        self.group_stats: Dict[str, Dict[str, Any]] = {}
 
     def local_machines(self, n_machines: int) -> Tuple[int, ...]:
         assert n_machines == self.n_processes, (
@@ -192,6 +330,10 @@ class RpcTransport(SamplingTransport):
     def bind(self, system) -> None:
         self.server = RpcSamplingServer(
             system, self.ports[self.process_id], self.authkey)
+
+    def bind_state(self, state) -> None:
+        assert self.server is not None, "bind() before bind_state()"
+        self.server.state = state
 
     def connect(self) -> None:
         deadline = time.monotonic() + self.connect_timeout_s
@@ -215,6 +357,9 @@ class RpcTransport(SamplingTransport):
             assert self._call(m, "ping") == "pong"
 
     def _call(self, machine: int, op: str, *payload):
+        if op not in OPS:       # client side of the shared op table
+            raise ValueError(f"unknown rpc op {op!r} "
+                             f"(registered: {OPS.names()})")
         data = pickle.dumps((op, payload),
                             protocol=pickle.HIGHEST_PROTOCOL)
         t0 = time.perf_counter()
@@ -222,10 +367,18 @@ class RpcTransport(SamplingTransport):
             conn = self._conns[machine]
             conn.send_bytes(data)
             raw = conn.recv_bytes()
-        self.wait_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.wait_s += dt
         self.calls += 1
         self.bytes_out += len(data)
         self.bytes_in += len(raw)
+        g = self.group_stats.setdefault(
+            OPS.group(op),
+            {"calls": 0, "bytes_out": 0, "bytes_in": 0, "wait_s": 0.0})
+        g["calls"] += 1
+        g["bytes_out"] += len(data)
+        g["bytes_in"] += len(raw)
+        g["wait_s"] += dt
         status, result = pickle.loads(raw)
         if status == _ERR:
             raise RuntimeError(
@@ -233,10 +386,33 @@ class RpcTransport(SamplingTransport):
         return result
 
     def sample_hop(self, machine: int, rank: int, targets: np.ndarray,
-                   times: np.ndarray, pmask: np.ndarray, k: int):
+                   times: np.ndarray, pmask: np.ndarray, k: int,
+                   req_machine: int = 0, seq: int = 0, hop: int = 0):
         return self._call(machine, "hop", machine, rank,
                           np.asarray(targets), np.asarray(times),
-                          np.asarray(pmask), int(k))
+                          np.asarray(pmask), int(k), int(req_machine),
+                          int(seq), int(hop))
+
+    # -- state ops -------------------------------------------------------
+    def feat_get(self, machine: int, table: str, ids: np.ndarray):
+        return self._call(machine, "feat_get", table,
+                          np.asarray(ids, np.int64))
+
+    def feat_put(self, machine: int, table: str, ids: np.ndarray,
+                 vals: np.ndarray):
+        return self._call(machine, "feat_put", table,
+                          np.asarray(ids, np.int64),
+                          np.asarray(vals, np.float32))
+
+    def mem_get(self, machine: int, ids: np.ndarray):
+        return self._call(machine, "mem_get", np.asarray(ids, np.int64))
+
+    def mem_put(self, machine: int, ids: np.ndarray, mem: np.ndarray,
+                ts: np.ndarray):
+        return self._call(machine, "mem_put",
+                          np.asarray(ids, np.int64),
+                          np.asarray(mem, np.float32),
+                          np.asarray(ts, np.float64))
 
     def barrier(self, tag: str) -> None:
         """Host barrier over the jax.distributed coordination service.
@@ -267,6 +443,11 @@ class RpcTransport(SamplingTransport):
             self.server.close()
 
     def stats(self) -> Dict[str, Any]:
+        st = self.group_stats.get("state", {})
         return {"calls": self.calls, "bytes_out": self.bytes_out,
                 "bytes_in": self.bytes_in,
-                "wait_s": round(self.wait_s, 6)}
+                "wait_s": round(self.wait_s, 6),
+                "state_calls": st.get("calls", 0),
+                "state_bytes": (st.get("bytes_out", 0)
+                                + st.get("bytes_in", 0)),
+                "state_wait_s": round(st.get("wait_s", 0.0), 6)}

@@ -308,6 +308,7 @@ def worker_main(run_cfg: Dict[str, Any],
         "n_local_devices": spec.local_devices,
         "rounds": rounds,
         "rpc": transport.stats(),
+        "state": tr.state.stats(),
     }
     print(RESULT_TAG + json.dumps(result), flush=True)
     # drain peers' last remote fetches before tearing the server down
@@ -336,7 +337,7 @@ def _default_run_cfg(args) -> Dict[str, Any]:
                        alpha=2.2, seed=7),
         "dist": {"collective": args.collective},
         "trainer": dict(threshold=32, cache_ratio=0.1, lr=1e-3,
-                        seed=0, overlap=True),
+                        seed=0, overlap=True, state=args.state),
         "warm": warm, "round_size": rnd, "rounds": args.rounds,
         "epochs": args.epochs,
         "replay_ratio": 0.2, "replay_round": args.rounds - 1,
@@ -364,6 +365,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     choices=("tgat", "tgn", "graphsage", "gat"))
     ap.add_argument("--collective", default="bucketed",
                     choices=("bucketed", "quantized", "topk"))
+    ap.add_argument("--state", default="replicated",
+                    choices=("replicated", "sharded"),
+                    help="feature/TGN-memory state service: replicated "
+                         "per process, or owner-sharded over the "
+                         "transport's state RPCs")
     ap.add_argument("--timeout", type=float, default=900.0)
     args = ap.parse_args(argv)
 
@@ -380,7 +386,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               f"{last['loss']:.5f}, ap {last['ap']:.4f}, rpc "
               f"{r['rpc']['calls']} calls / "
               f"{r['rpc']['bytes_out'] + r['rpc']['bytes_in']} B / "
-              f"{r['rpc']['wait_s']:.2f}s wait")
+              f"{r['rpc']['wait_s']:.2f}s wait, state "
+              f"[{r['state']['mode']}] {r['state']['calls']} calls / "
+              f"{r['state']['resident_bytes']} B resident")
     # replicated training: every process must report the same losses
     l0 = [rd["loss"] for rd in results[0]["rounds"]]
     for r in results[1:]:

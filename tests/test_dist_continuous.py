@@ -142,7 +142,7 @@ def test_tgn_memory_parity():
         assert abs(a.loss - b.loss) <= 1e-4, (a.loss, b.loss)
     # memory actually engaged on both sides
     active = np.unique(STREAM.src[:WARM + 3 * ROUND])
-    assert np.abs(d.store.get_memory(active)).sum() > 0
+    assert np.abs(d.state.get_memory(active)[0]).sum() > 0
 
 
 @needs8

@@ -119,6 +119,52 @@ def test_missing_ids_return_zeros():
     assert (out == 0).all()
 
 
+def _uniform_system(P=2, G=2, seed=0):
+    parts = [GraphPartition(p, P, threshold=16) for p in range(P)]
+    disp = Dispatcher(parts)
+    src, dst, ts = _events(seed=11)
+    disp.add_edges(src, dst, ts)
+    return DistributedSamplerSystem(parts, n_gpus=G, fanouts=(4, 4),
+                                    policy="uniform", scan_pages=64,
+                                    seed=seed)
+
+
+def test_stochastic_sampling_is_request_order_independent():
+    """Stochastic (uniform) policies derive their RNG key per REQUEST
+    — fold_in over (requesting machine, request seq, hop) on the
+    serving sampler's base key — so the order in which trainers' hops
+    arrive at a shared serving sampler cannot change what anyone draws.
+    Two identical systems, opposite service orders: bit-equal."""
+    rng = np.random.default_rng(2)
+    seeds = {(m, r): rng.integers(0, 200, 48)
+             for m in range(2) for r in range(2)}
+    ts = np.full(48, 900.0, np.float32)
+
+    def run(order):
+        sys_ = _uniform_system()
+        out = {}
+        for rnd in range(2):
+            for m, r in order:
+                out[(rnd, m, r)] = sys_.sample(m, r, seeds[(m, r)], ts)
+        return out
+
+    a = run([(0, 0), (0, 1), (1, 0), (1, 1)])
+    b = run([(1, 1), (1, 0), (0, 1), (0, 0)])
+    assert a.keys() == b.keys()
+    for key in a:
+        for la, lb in zip(a[key], b[key]):
+            np.testing.assert_array_equal(la.nbr_ids, lb.nbr_ids)
+            np.testing.assert_array_equal(la.nbr_eids, lb.nbr_eids)
+            np.testing.assert_array_equal(la.mask, lb.mask)
+    # ... and the per-(trainer, rank) request sequence really advances
+    # the stream: round 2 is a fresh draw, not a replay of round 1
+    diff = any(
+        not np.array_equal(la.nbr_eids, lb.nbr_eids)
+        for (m, r) in seeds
+        for la, lb in zip(a[(0, m, r)], a[(1, m, r)]))
+    assert diff
+
+
 # ---------------------------------------------------------------------------
 # Dispatcher.ingest ordering property (hypothesis)
 # ---------------------------------------------------------------------------

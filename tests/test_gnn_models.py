@@ -119,7 +119,7 @@ def test_tgn_memory_updates_and_is_used():
     # memories of active nodes are non-zero after a round
     active = np.unique(np.concatenate([stream.src[500:800],
                                        stream.dst[500:800]]))
-    mem = tr.store.get_memory(active)
+    mem, _ = tr.state.get_memory(active)
     assert np.abs(mem).sum() > 0
     assert np.isfinite(mem).all()
 

@@ -140,9 +140,40 @@ def test_two_process_parity_tgn_memory(subprocess_env):
     stream = synth_ctdg(**run_cfg["stream"])
     active = np.unique(stream.src[:run_cfg["warm"]
                                   + 3 * run_cfg["round_size"]])
-    assert np.abs(tr.store.get_memory(active)).sum() > 0
+    assert np.abs(tr.state.get_memory(active)[0]).sum() > 0
     results = _launch_workers(run_cfg, subprocess_env)
     _assert_parity(run_cfg, results, ref)
+
+
+@pytest.mark.slow
+def test_two_process_sharded_state_parity_tgn(subprocess_env):
+    """Owner-sharded StateService across REAL process boundaries: each
+    worker holds only its owned feature/memory partitions, remote rows
+    (TGN memory included) travel over the transport's state ops — and
+    the run still matches the replicated in-process trainer to <= 1e-4
+    train/eval loss over 3 rounds."""
+    run_cfg = _run_cfg("tgn")
+    ref_tr, ref = _reference_rounds(run_cfg)   # replicated reference
+    run_cfg["trainer"] = dict(run_cfg["trainer"], state="sharded")
+    results = _launch_workers(run_cfg, subprocess_env)
+    _assert_parity(run_cfg, results, ref)
+    ref_resident = ref_tr.state.resident_bytes()
+    for r in results:
+        ss = r["state"]
+        assert ss["mode"] == "sharded"
+        # remote rows really crossed the wire, and this process served
+        # its peers' requests for the rows it owns
+        assert ss["wire_calls"] > 0 and ss["wire_bytes"] > 0
+        assert ss["served_calls"] > 0
+        assert ss["wait_s"] > 0.0
+        # each process holds ~1/P of the replicated per-process tables
+        assert ss["resident_bytes"] <= 0.7 * ref_resident, \
+            (ss["resident_bytes"], ref_resident)
+        # state-RPC traffic surfaces per round in DistRoundMetrics
+        for rd in r["rounds"]:
+            assert rd["state_calls"] > 0
+            assert rd["state_bytes"] > 0
+            assert rd["state_resident_bytes"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -234,8 +265,14 @@ def test_rpc_server_rejects_unknown_ops():
         t0.bind(system)
         t1.connect()
         assert t1._call(0, "ping") == "pong"
-        with pytest.raises(RuntimeError, match="unknown rpc op"):
+        # unknown ops are rejected CLIENT-side (the shared op table is
+        # the contract — nothing unregistered ever hits the wire)
+        with pytest.raises(ValueError, match="unknown rpc op"):
             t1._call(0, "bogus")
+        # registered state ops reach the server, which refuses them
+        # while no state service is bound (sampling-only server)
+        with pytest.raises(RuntimeError, match="no state service"):
+            t1._call(0, "feat_get", "node", np.arange(4))
     finally:
         t1.close()
         t0.close()

@@ -54,7 +54,7 @@ def test_memory_state_active(scenario):
     stream, tr, _ = scenario
     active = np.unique(np.concatenate([stream.src[-500:],
                                        stream.dst[-500:]]))
-    mem = tr.store.get_memory(active)
+    mem, _ = tr.state.get_memory(active)
     assert np.isfinite(mem).all()
     assert np.abs(mem).sum() > 0
 
