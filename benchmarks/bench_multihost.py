@@ -12,6 +12,12 @@ Everything is emitted from worker 0's perspective plus a fleet summary;
 the parent also cross-checks that all workers report identical losses
 (replicated training), so the bench doubles as a cheap correctness
 canary in the nightly lane.
+
+The second (owner-sharded StateService) fleet additionally reports the
+coalesced state-RPC surface — round trips per batch vs the per-table
+baseline, dedup savings, prefetch hit rate / overlap, stale serves —
+and enforces the coalescing budget: <= P-1 wire trips per global batch
+and a >= 3x trip reduction over the uncoalesced baseline.
 """
 from __future__ import annotations
 
@@ -138,6 +144,69 @@ def run() -> None:
              f"residentB={ss['resident_bytes']}"
              f"(repl={rep_res})")
 
+    # coalesced state-RPC accounting: one state_batch frame per foreign
+    # peer per global batch, so the wire round trips must sit at or
+    # under the (P-1)-per-batch budget (small headroom for cache-probe
+    # races that fall back to a direct fetch), and the per-table
+    # baseline the coalescing replaced must be >= 3x larger
+    budget = (P - 1) + 0.25
+    sh_rows = []
+    for res in sh_results:
+        for i, m in enumerate(res["rounds"]):
+            pf_total = m["state_pf_hits"] + m["state_pf_misses"]
+            nh = m["node_hit_per_part"]
+            eh = m["edge_hit_per_part"]
+            row = {
+                "worker": res["process_id"], "round": i,
+                "state_round_trips": m["state_round_trips"],
+                "state_trips_per_batch": m["state_trips_per_batch"],
+                "state_staged_batches": m["state_staged_batches"],
+                "state_baseline_trips": m["state_baseline_trips"],
+                "state_dedup_saved_bytes": m["state_dedup_saved_bytes"],
+                "state_pf_overlap_s": m["state_pf_overlap_s"],
+                "state_pf_hit_rate": round(
+                    m["state_pf_hits"] / max(pf_total, 1), 4),
+                "state_stale_served": m["state_stale_served"],
+                "state_wire_bytes_per_part":
+                    list(m["state_wire_bytes_per_part"]),
+                # remote-only device cache (sharded mode caches rows
+                # owned by foreign processes exclusively)
+                "remote_node_hit_rate": round(
+                    sum(nh) / len(nh), 4) if nh else 0.0,
+                "remote_edge_hit_rate": round(
+                    sum(eh) / len(eh), 4) if eh else 0.0,
+                "state_wait_s": m["state_wait_s"],
+            }
+            sh_rows.append(row)
+            assert m["state_trips_per_batch"] <= budget, (
+                f"worker {res['process_id']} round {i}: "
+                f"{m['state_trips_per_batch']} trips/batch exceeds "
+                f"coalesced budget {budget}")
+            assert m["state_stale_served"] == 0, row  # fenced default
+            if res["process_id"] == 0:
+                emit(f"multihost/state_rpc/round{i}",
+                     m["state_wait_s"] * 1e6,
+                     f"trips={m['state_round_trips']};"
+                     f"per_batch={m['state_trips_per_batch']};"
+                     f"baseline={m['state_baseline_trips']};"
+                     f"dedup_savedB={m['state_dedup_saved_bytes']};"
+                     f"pf_hit={row['state_pf_hit_rate']:.2f};"
+                     f"pf_overlap={m['state_pf_overlap_s']:.3f}s")
+    total_baseline = sum(r["state"]["baseline_trips"]
+                         for r in sh_results)
+    total_trips = sum(r["state"]["round_trips"] for r in sh_results)
+    reduction = total_baseline / max(total_trips, 1)
+    assert reduction >= 3.0, (
+        f"coalescing only cut state round trips "
+        f"{reduction:.2f}x (< 3x): {total_baseline} -> {total_trips}")
+    total_pf_hits = sum(r["state"]["pf_hits"] for r in sh_results)
+    total_pf = total_pf_hits + sum(r["state"]["pf_misses"]
+                                   for r in sh_results)
+    emit("multihost/state_rpc/coalescing", 0.0,
+         f"baseline_trips={total_baseline};trips={total_trips};"
+         f"reduction={reduction:.1f}x;"
+         f"pf_hit_rate={total_pf_hits / max(total_pf, 1):.2f}")
+
     save_json("multihost", {
         "topology": {"processes": P, "ranks_per_process": G,
                      "devices_per_process": G + 1,
@@ -154,6 +223,12 @@ def run() -> None:
             "replicated_resident_bytes": rep_res,
             "loss_delta_vs_replicated": max(
                 abs(a - b) for a, b in zip(l0, ls)),
+            "rounds": sh_rows,
+            "trips_per_batch_budget": budget,
+            "baseline_trips": total_baseline,
+            "round_trips": total_trips,
+            "trip_reduction": round(reduction, 2),
+            "pf_hit_rate": round(total_pf_hits / max(total_pf, 1), 4),
         },
         "losses_agree": True,
     })

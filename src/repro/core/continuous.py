@@ -350,12 +350,6 @@ class ContinuousTrainer:
             self.n_partitions, d_node=cfg.d_node, d_edge=cfg.d_edge,
             d_memory=cfg.d_memory if cfg.use_memory else 0)
 
-    @property
-    def store(self) -> StateService:
-        """Deprecated alias for :attr:`state` (PR-6 migration note in
-        repro.core.feature_store) — same object, new name."""
-        return self.state
-
     def _init_sampling(self, threshold: int, seed: int) -> None:
         self.n_partitions = 1
         self.graph = DynamicGraph(threshold=threshold, undirected=True)
@@ -397,6 +391,10 @@ class ContinuousTrainer:
         # single-partition service here: every src hashes to owner 0
         self.state.register_edges(uniq_e, np.zeros_like(uniq_e))
         self.state.put_edge_feats(uniq_e, batch.edge_features(uniq_e))
+        # write coherence: a row cached before this batch's feature
+        # landed (featureless negative) must not keep its stale zeros
+        self.node_cache.invalidate(nodes)
+        self.edge_cache.invalidate(uniq_e)
         if self._snap is None:
             self._snap = build_snapshot(self.graph)
         else:

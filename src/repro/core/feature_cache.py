@@ -178,20 +178,24 @@ class FeatureCache:
         self.use_pallas = use_pallas
         self.hits = 0
         self.accesses = 0
+        self.bypassed = 0     # valid rows excluded by a cacheable mask
         # hit mask of the latest fetch(), aligned with its `ids` arg
         # (callers bucket hits per owner partition from it)
         self.last_hit: Optional[np.ndarray] = None
         self._round_snapshot: Optional[CacheState] = None
 
     # -- core ops ------------------------------------------------------
-    def lookup(self, ids) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        ids = jnp.asarray(ids, jnp.int32)
+    def _lookup_raw(self, ids_j) -> Tuple[jnp.ndarray, jnp.ndarray]:
         if self.use_pallas:
             from repro.kernels.cache_gather.ops import cache_gather_pallas
-            feats, hit = cache_gather_pallas(
-                self.state.slot_of, self.state.ids, self.state.feats, ids)
-        else:
-            feats, hit = cache_lookup(self.state, ids)
+            return cache_gather_pallas(
+                self.state.slot_of, self.state.ids, self.state.feats,
+                ids_j)
+        return cache_lookup(self.state, ids_j)
+
+    def lookup(self, ids) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        ids = jnp.asarray(ids, jnp.int32)
+        feats, hit = self._lookup_raw(ids)
         valid = np.asarray(ids) >= 0
         self.accesses += int(valid.sum())
         self.hits += int(np.asarray(hit)[valid].sum())
@@ -203,9 +207,55 @@ class FeatureCache:
             jnp.asarray(miss_feats), policy=self.policy,
             max_replace=self.max_replace)
 
-    def fetch(self, ids, fetch_missing) -> jnp.ndarray:
+    def invalidate(self, ids) -> int:
+        """Drop the listed ids from the cache (write coherence).
+
+        Ingest calls this for every id it (re)writes: a row cached
+        BEFORE its feature landed — e.g. a negative-sampled node read
+        while still featureless — would otherwise keep serving its
+        stale zeros after the store learned the real value.  Vacated
+        slots get the worst policy score so they are refilled first.
+        Returns the number of rows dropped."""
+        present = self.probe(ids)
+        if not present.any():
+            return 0
+        hot = np.unique(np.asarray(ids, np.int64)[present])
+        slot_of = np.asarray(self.state.slot_of).copy()
+        sids = np.asarray(self.state.ids).copy()
+        score = np.asarray(self.state.score).copy()
+        slots = slot_of[hot]
+        sids[slots] = NULL
+        score[slots] = _NEG
+        slot_of[hot] = NULL
+        self.state = dataclasses.replace(
+            self.state, slot_of=jnp.asarray(slot_of),
+            ids=jnp.asarray(sids), score=jnp.asarray(score))
+        return len(hot)
+
+    def probe(self, ids) -> np.ndarray:
+        """Host-side membership test: True where the id is currently
+        cached.  No stats, no policy bookkeeping, no device round trip —
+        the prefetcher uses it to skip rows the device cache will hit
+        anyway."""
+        ids = np.asarray(ids, np.int64)
+        slot_of = np.asarray(self.state.slot_of)
+        sids = np.asarray(self.state.ids)
+        safe = np.clip(ids, 0, len(slot_of) - 1)
+        slot = slot_of[safe]
+        ok = (ids >= 0) & (ids < len(slot_of)) & (slot >= 0)
+        return ok & (sids[np.clip(slot, 0, len(sids) - 1)] == ids)
+
+    def fetch(self, ids, fetch_missing, cacheable=None) -> jnp.ndarray:
         """lookup -> host-fetch misses via `fetch_missing(ids)` -> update.
         Returns the full (N, D) feature block.
+
+        ``cacheable`` (optional bool mask over ``ids``) makes the cache
+        placement-aware: False rows are fetched through but NEVER
+        inserted, and the hit/access counters only cover True rows — so
+        capacity and hit-rate both measure the rows worth caching (the
+        distributed trainers pass the remote-owner mask; locally owned
+        rows are a host table lookup already).  Hits remain possible
+        only for rows that were cacheable when inserted.
 
         Request lengths are padded to the next power of two (NULL ids)
         so the jitted lookup/update compile once per bucket, not once
@@ -218,15 +268,31 @@ class FeatureCache:
             ids_pad[:n] = ids_np
         else:
             ids_pad = ids_np
+        if cacheable is not None:
+            ok = np.zeros(bucket, bool)
+            ok[:n] = np.asarray(cacheable, bool)
+        else:
+            ok = None
         ids_j = jnp.asarray(ids_pad)
-        feats, hit = self.lookup(ids_j)
+        feats, hit = self._lookup_raw(ids_j)
         hit_np = np.asarray(hit)
+        counted = (ids_pad >= 0) if ok is None else ok
+        self.accesses += int(counted.sum())
+        self.hits += int(hit_np[counted].sum())
+        self.bypassed += 0 if ok is None else int(
+            ((ids_pad >= 0) & ~ok).sum())
         need = (~hit_np) & (ids_pad >= 0)
         miss_feats = np.zeros((bucket, self.dim), np.float32)
         if need.any():
             miss_feats[need] = fetch_missing(ids_pad[need])
         out = jnp.where(hit[:, None], feats, jnp.asarray(miss_feats))
-        self.update(ids_j, hit, miss_feats)
+        if ok is None:
+            self.update(ids_j, hit, miss_feats)
+        else:
+            # non-cacheable lanes become NULL so the update never
+            # spends a slot (or an eviction) on them
+            upd_ids = jnp.asarray(np.where(ok, ids_pad, NULL))
+            self.update(upd_ids, hit, miss_feats)
         self.last_hit = hit_np[:n]
         return out[:n]
 
@@ -261,6 +327,7 @@ class FeatureCache:
     def reset_stats(self) -> None:
         self.hits = 0
         self.accesses = 0
+        self.bypassed = 0
 
     def contents(self) -> set:
         ids = np.asarray(self.state.ids)

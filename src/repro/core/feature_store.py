@@ -34,18 +34,13 @@ edges get larger ids), so lookups are O(1) — the paper's "searchsorted
 over ascending edge ids" degenerates to direct indexing with our
 contiguous id assignment.
 
-Migration note (PR 6): the pre-redesign ``DistributedFeatureStore``
-surface had asymmetric signatures — ``put_edge_features(eids, src,
-feats)`` vs ``get_edge_features(eids)``, and ``put_memory(ids, mem,
-ts)`` vs split ``get_memory``/``get_memory_ts``. The old names remain
-as thin deprecation shims for one PR (``DistributedFeatureStore`` is
-now a deprecated alias of ``ReplicatedStateService`` keeping the old
-mem-only ``get_memory`` return); new code uses the symmetric pairs
-above.
+The pre-redesign ``DistributedFeatureStore`` surface
+(``put_edge_features(eids, src, feats)``, mem-only ``get_memory``,
+``get_memory_ts``) was carried as deprecation shims for one PR after
+the redesign and has been removed.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Dict, Tuple
 
 import numpy as np
@@ -53,11 +48,6 @@ import numpy as np
 from repro.core.partition import owner_of
 
 _GROW = 1.5
-
-
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(f"{old} is deprecated (PR-6 StateService redesign); "
-                  f"use {new}", DeprecationWarning, stacklevel=3)
 
 
 class _Dense:
@@ -105,7 +95,7 @@ class _Dense:
 
 
 # ---------------------------------------------------------------------------
-# The protocol (plus one-PR deprecation shims for the old surface)
+# The protocol
 # ---------------------------------------------------------------------------
 
 
@@ -149,6 +139,21 @@ class StateService:
         ``put_memory``."""
         raise NotImplementedError
 
+    # -- placement -------------------------------------------------------
+    def owners(self, table: str, ids) -> np.ndarray:
+        """Per-id owner partition (-1 for padding / unregistered edges).
+        ``table`` is ``"node"``, ``"edge"`` or ``"memory"``."""
+        raise NotImplementedError
+
+    def remote_mask(self, table: str, ids) -> np.ndarray:
+        """True where the id's owner is a DIFFERENT partition than
+        ``local_rank`` — the rows worth spending device-cache capacity
+        on (owned rows are already a local host lookup). Padding and
+        unregistered ids are False."""
+        ids = np.asarray(ids, np.int64)
+        own = self.owners(table, ids)
+        return (own >= 0) & (own != self.local_rank)
+
     # -- accounting ------------------------------------------------------
     def resident_bytes(self) -> int:
         """Feature + memory bytes THIS process keeps resident (used rows
@@ -161,30 +166,6 @@ class StateService:
         ``wire_*`` the cross-process subset, ``served_calls`` requests
         answered for peers, plus ``resident_bytes``."""
         raise NotImplementedError
-
-    # -- deprecated pre-redesign names (one-PR shims) --------------------
-    def put_node_features(self, ids, feats) -> None:
-        _deprecated("put_node_features", "put_node_feats")
-        self.put_node_feats(ids, feats)
-
-    def get_node_features(self, ids) -> np.ndarray:
-        _deprecated("get_node_features", "get_node_feats")
-        return self.get_node_feats(ids)
-
-    def put_edge_features(self, eids, src, feats) -> None:
-        _deprecated("put_edge_features(eids, src, feats)",
-                    "register_edges(eids, src) + put_edge_feats(eids, "
-                    "feats)")
-        self.register_edges(eids, src)
-        self.put_edge_feats(eids, feats)
-
-    def get_edge_features(self, eids) -> np.ndarray:
-        _deprecated("get_edge_features", "get_edge_feats")
-        return self.get_edge_feats(eids)
-
-    def get_memory_ts(self, ids) -> np.ndarray:
-        _deprecated("get_memory_ts", "get_memory (returns (mem, ts))")
-        return self.get_memory(ids)[1]
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +284,18 @@ class ReplicatedStateService(StateService):
         ts = self._fetch("mem_ts", ids, 1)[:, 0]
         return mem, ts
 
+    # -- placement -------------------------------------------------------
+    def owners(self, table: str, ids) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        if table == "edge":
+            own = self._edge_owner.get(ids)[:, 0].astype(np.int64)
+            reg = np.zeros(len(ids), bool)
+            ok = (ids >= 0) & (ids < len(self._edge_owner.written))
+            reg[ok] = self._edge_owner.written[ids[ok]]
+            return np.where(reg, own, -1)
+        own = owner_of(np.maximum(ids, 0), self.n_parts)
+        return np.where(ids >= 0, own, -1)
+
     # -- accounting ------------------------------------------------------
     def resident_bytes(self) -> int:
         total = 0
@@ -319,21 +312,9 @@ class ReplicatedStateService(StateService):
                 "calls": self.remote_calls, "bytes": self.remote_bytes,
                 "wait_s": 0.0, "wire_calls": 0, "wire_bytes": 0,
                 "served_calls": 0,
+                "round_trips": 0, "baseline_trips": 0,
+                "dedup_saved_bytes": 0,
+                "pf_wire_s": 0.0, "pf_overlap_s": 0.0,
+                "pf_hits": 0, "pf_misses": 0, "stale_served": 0,
+                "wire_bytes_per_part": [0] * self.n_parts,
                 "resident_bytes": self.resident_bytes()}
-
-
-class DistributedFeatureStore(ReplicatedStateService):
-    """Deprecated pre-redesign name. Keeps the OLD asymmetric surface
-    semantics for one PR — in particular the mem-only ``get_memory``
-    return — so external callers migrate on their own schedule. New
-    code constructs :class:`ReplicatedStateService` (or
-    ``repro.dist.state.ShardedStateService``) directly."""
-
-    def get_memory(self, ids) -> np.ndarray:  # type: ignore[override]
-        _deprecated("DistributedFeatureStore.get_memory (mem-only)",
-                    "StateService.get_memory (returns (mem, ts))")
-        return self._fetch("memory", ids, self.d_memory)
-
-    def get_memory_ts(self, ids) -> np.ndarray:
-        _deprecated("get_memory_ts", "get_memory (returns (mem, ts))")
-        return self._fetch("mem_ts", ids, 1)[:, 0]

@@ -73,9 +73,16 @@ class FeatureAssembler:
     def needs_finalize(self) -> bool:
         return self.memory is not None
 
-    def prefetch(self, seeds: np.ndarray, seed_ts: np.ndarray, sample_fn,
-                 seed_mask: Optional[np.ndarray] = None) -> Dict[str, Any]:
-        """Sample + fetch one batch of [src|dst|neg] seeds.
+    def sample(self, seeds: np.ndarray, seed_ts: np.ndarray, sample_fn,
+               seed_mask: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Phase 1 of ``prefetch``: k-hop sampling only, no feature I/O.
+
+        The split lets the distributed trainer sample EVERY shard of a
+        batch first, issue one coalesced remote-state prefetch over the
+        union of ids (``collect_ids``), and only then run the
+        cache-fronted assembly (``assemble_batch``) — so the remote
+        round trips overlap the in-flight device step instead of
+        serializing inside each shard's fetch.
 
         ``seed_mask`` flags the valid third of the seed triple (padded
         lanes carry 0 and are loss-masked in the forward)."""
@@ -86,29 +93,79 @@ class FeatureAssembler:
             seed_mask = np.ones(len(seeds) // 3, np.float32)
         mask_j = jnp.asarray(seed_mask, jnp.float32)
 
+        t0 = time.perf_counter()
         if cfg.model == "dysat":
             # one hop-set per time-window snapshot (newest last)
-            snapshots = []
-            for i in reversed(range(cfg.n_snapshots)):
-                t0 = time.perf_counter()
-                layers = sample_fn(seeds, seed_ts - i * cfg.window)
-                self.timers["sample"] += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                snapshots.append(assemble(layers, self.fetch_node,
-                                          self.fetch_edge))
-                self.timers["fetch"] += time.perf_counter() - t0
-            return {"batch": {"snapshots": snapshots, "seed_mask": mask_j},
-                    "layers": None}
-
-        t0 = time.perf_counter()
-        layers = sample_fn(seeds, seed_ts)
+            snap_layers = [sample_fn(seeds, seed_ts - i * cfg.window)
+                           for i in reversed(range(cfg.n_snapshots))]
+            sampled = {"snap_layers": snap_layers, "mask": mask_j}
+        else:
+            sampled = {"layers": sample_fn(seeds, seed_ts), "mask": mask_j}
         self.timers["sample"] += time.perf_counter() - t0
+        return sampled
 
+    def collect_ids(self, sampled: Dict[str, Any]):
+        """Union of (node ids, edge ids, memory ids) the assembly and
+        finalize of ``sampled`` will read — what an async remote-row
+        prefetch must cover.  Memory ids include each node's pending
+        raw-message counterpart (and the pending edge's feature id goes
+        into the edge set); they are computed against the CURRENT raw
+        state, so a commit between collect and finalize can shift a few
+        ids — those just fall back to the synchronous path."""
+        layer_list = (sampled["layers"] if "layers" in sampled
+                      else [l for snap in sampled["snap_layers"]
+                            for l in snap])
+        nodes, eids = [], []
+        for layer in layer_list:
+            nodes.append(np.asarray(layer.dst_nodes, np.int64).ravel())
+            nodes.append(np.asarray(layer.nbr_ids, np.int64).ravel())
+            eids.append(np.asarray(layer.nbr_eids, np.int64).ravel())
+        nodes = np.unique(np.concatenate(nodes)) if nodes else \
+            np.zeros(0, np.int64)
+        nodes = nodes[nodes >= 0]
+        eids = np.unique(np.concatenate(eids)) if eids else \
+            np.zeros(0, np.int64)
+        eids = eids[eids >= 0]
+        mem_ids = None
+        if self.memory is not None:
+            m = self.memory
+            safe = nodes[nodes < len(m.raw_has)]
+            pend = safe[m.raw_has[safe]]
+            others = m.raw_other[pend]
+            # id 0 rides along: gather() reads memory row 0 for every
+            # node WITHOUT a pending message (its placeholder "other")
+            mem_ids = np.unique(np.concatenate(
+                [nodes, others, np.zeros(1, np.int64)]))
+            pend_eids = m.raw_eid[pend]
+            eids = np.unique(np.concatenate([eids,
+                                             pend_eids[pend_eids >= 0]]))
+        return nodes, eids, mem_ids
+
+    def assemble_batch(self, sampled: Dict[str, Any]) -> Dict[str, Any]:
+        """Phase 2 of ``prefetch``: cache/StateService feature fetch +
+        batch assembly for an already-sampled shard."""
+        mask_j = sampled["mask"]
         t0 = time.perf_counter()
+        if "snap_layers" in sampled:
+            snapshots = [assemble(layers, self.fetch_node,
+                                  self.fetch_edge)
+                         for layers in sampled["snap_layers"]]
+            self.timers["fetch"] += time.perf_counter() - t0
+            return {"batch": {"snapshots": snapshots,
+                              "seed_mask": mask_j},
+                    "layers": None}
+        layers = sampled["layers"]
         hops = assemble(layers, self.fetch_node, self.fetch_edge)
         self.timers["fetch"] += time.perf_counter() - t0
         return {"batch": {"hops": hops, "seed_mask": mask_j},
                 "layers": layers if self.needs_finalize else None}
+
+    def prefetch(self, seeds: np.ndarray, seed_ts: np.ndarray, sample_fn,
+                 seed_mask: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Sample + fetch one batch of [src|dst|neg] seeds (the two
+        phases back to back — the single-host path)."""
+        return self.assemble_batch(
+            self.sample(seeds, seed_ts, sample_fn, seed_mask))
 
     def finalize(self, staged: Dict[str, Any]) -> Dict[str, Any]:
         """Late-bound staging: gather the TGN memory blobs NOW, after

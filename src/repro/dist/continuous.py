@@ -55,12 +55,19 @@ replicas from the deterministic ingest + the replicated step, which
 keeps the numerics bit-comparable to the in-process run; with
 ``state="sharded"`` each process holds ONLY its owned feature/memory
 partitions (``repro.dist.state.ShardedStateService``) and remote rows
-travel over the transport's ``feat_get``/``mem_put``-style state ops,
-with the FeatureCache absorbing the remote read latency.  Ingest is
-bracketed by coordination-service barriers: remote samplers read the
-partition state it mutates; the sharded-memory commit adds read/commit
-fences so no owner overwrites step t-1's memory while a peer still
-reads it.
+travel over the transport in ONE coalesced ``state_batch`` round trip
+per peer per global batch: staging samples every local shard first,
+unions the remote node/edge/memory ids, and ships them on a
+background thread while the previous jitted step runs — assembly then
+drains the prefetch buffer through the placement-aware FeatureCache
+(remote rows only) instead of issuing per-table ``feat_get`` calls.
+Ingest is bracketed by coordination-service barriers: remote samplers
+read the partition state it mutates; the sharded-memory commit adds
+read/commit fences so no owner overwrites step t-1's memory while a
+peer still reads it — unless ``memory_staleness > 0``, which lets
+remote memory reads serve a buffered copy up to k commits stale and
+drops both fences off the critical path (bounded loss deviation,
+exact at 0).
 """
 from __future__ import annotations
 
@@ -76,7 +83,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.tgn_gdelt import DistConfig, GNNConfig
 from repro.core.continuous import ContinuousTrainer, RoundMetrics
-from repro.core.partition import Dispatcher, GraphPartition, owner_of
+from repro.core.partition import Dispatcher, GraphPartition
 from repro.core.scheduler import DistributedSamplerSystem
 from repro.data.events import EventStream
 from repro.dist import collectives as C
@@ -106,6 +113,21 @@ class DistRoundMetrics(RoundMetrics):
     state_bytes: int = 0
     state_wait_s: float = 0.0   # client-side blocking on state RPCs
     state_resident_bytes: int = 0   # per-process resident table bytes
+    # coalesced-read surface (PR 7): real wire round trips vs what the
+    # per-table path would have issued, dedup savings, prefetch overlap
+    # (wire time hidden behind the in-flight step) and the staleness
+    # counter; per-partition wire bytes pair with the per-partition
+    # cache hit rates above for the hit-rate-vs-wire-bytes tradeoff
+    state_round_trips: int = 0
+    state_trips_per_batch: float = 0.0
+    state_staged_batches: int = 0
+    state_baseline_trips: int = 0
+    state_dedup_saved_bytes: int = 0
+    state_pf_overlap_s: float = 0.0
+    state_pf_hits: int = 0
+    state_pf_misses: int = 0
+    state_stale_served: int = 0
+    state_wire_bytes_per_part: Tuple[int, ...] = ()
 
 
 def _unstack(tree):
@@ -127,9 +149,12 @@ class DistributedContinuousTrainer(ContinuousTrainer):
                  use_pallas: bool = False, lr: float = 1e-3,
                  seed: int = 0, overlap: bool = True,
                  transport: Optional[SamplingTransport] = None,
-                 state: str = "replicated"):
+                 state: str = "replicated", memory_staleness: int = 0):
         if state not in ("replicated", "sharded"):
             raise ValueError(f"unknown state mode {state!r}")
+        if memory_staleness < 0:
+            raise ValueError("memory_staleness must be >= 0")
+        self.memory_staleness = int(memory_staleness)
         self.dist = dist if dist is not None else DistConfig()
         self.transport = transport if transport is not None \
             else LocalTransport()
@@ -206,7 +231,8 @@ class DistributedContinuousTrainer(ContinuousTrainer):
             d_memory=cfg.d_memory if cfg.use_memory else 0,
             hosted=self.transport.local_machines(self.dist.n_machines),
             transport=self.transport,
-            local_rank=self.transport.process_id)
+            local_rank=self.transport.process_id,
+            memory_staleness=self.memory_staleness)
         # expose the hosted shards to peer processes; the first remote
         # state access happens after the pre-ingest barrier, long after
         # every fleet member has bound its state here
@@ -248,6 +274,7 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         Pm = dist.n_machines
         self._part_hits = np.zeros((2, Pm), np.int64)
         self._part_accesses = np.zeros((2, Pm), np.int64)
+        self._staged_batches = 0    # global batches staged this round
 
     # -- multihost global-array staging ------------------------------------
     def _replicated(self, tree):
@@ -393,15 +420,30 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         self._dist_eval = jax.jit(smap_eval)
 
     # -- feature fetch (device cache in front of the sharded store) -------
+    # With sharded state the device cache is placement-aware: only rows
+    # whose owner is a different machine than this process's rank are
+    # cacheable (and hit/miss-counted), so the hit rate measures
+    # avoided (real or modeled) wire traffic, not re-reads of the local
+    # shard.  The in-process sharded run hosts every machine in one
+    # process but keeps the same owner != local_rank mask — its cost
+    # model matches the real multi-process launch.  Replicated state
+    # has no remote rows by construction and keeps the unmasked cache.
+    def _cacheable(self, table: str, ids) -> Optional[np.ndarray]:
+        if self.state_mode != "sharded":
+            return None
+        return self.state.remote_mask(table, ids)
+
     def _fetch_node(self, ids):
         out = self.node_cache.fetch(
-            ids, lambda miss: self.state.get_node_feats(miss))
+            ids, lambda miss: self.state.get_node_feats(miss),
+            cacheable=self._cacheable("node", ids))
         self._account_cache(0, ids, self.node_cache.last_hit)
         return out
 
     def _fetch_edge(self, eids):
         out = self.edge_cache.fetch(
-            eids, lambda miss: self.state.get_edge_feats(miss))
+            eids, lambda miss: self.state.get_edge_feats(miss),
+            cacheable=self._cacheable("edge", eids))
         self._account_cache(1, eids, self.edge_cache.last_hit)
         return out
 
@@ -409,12 +451,12 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         """Per-partition hit accounting: cache traffic bucketed by the
         owner machine that a miss would have had to RPC to."""
         ids = np.asarray(ids, np.int64)
-        valid = ids >= 0
+        own = self.state.owners("node" if kind == 0 else "edge", ids)
+        valid = own >= 0
         if not valid.any():
             return
-        own = owner_of(ids[valid], self.dist.n_machines)
-        np.add.at(self._part_accesses[kind], own, 1)
-        np.add.at(self._part_hits[kind], own,
+        np.add.at(self._part_accesses[kind], own[valid], 1)
+        np.add.at(self._part_hits[kind], own[valid],
                   np.asarray(hit)[valid].astype(np.int64))
 
     def hit_rate_per_partition(self, kind: str) -> Tuple[float, ...]:
@@ -430,15 +472,22 @@ class DistributedContinuousTrainer(ContinuousTrainer):
             np.asarray(ts, np.float32))
 
     # -- sharded batch staging ---------------------------------------------
-    def _stage_shards(self, src, dst, ts, *, micros: int
-                      ) -> Dict[str, Any]:
+    def _stage_shards(self, src, dst, ts, *, micros: int,
+                      for_train: bool = True) -> Dict[str, Any]:
         """Prefetch the stacked (W[, A], ...) device batch for one
         global batch: each worker's shard is sampled through the static
         schedule from that worker's (machine, rank) perspective.  The
         negatives are drawn ONCE for the global batch (same RNG
         consumption as the single-host trainer).  Batches that do not
         split evenly are padded per shard (pow2 lanes, loss-masked) so
-        EVERY step takes the shard_map collective path."""
+        EVERY step takes the shard_map collective path.
+
+        Staging is two-phase so remote state reads coalesce: first
+        every local shard is SAMPLED, then ONE async ``state_batch``
+        prefetch per remote peer ships the union of all remote rows
+        the batch will touch (overlapping the in-flight device step),
+        and only then does cache-fronted assembly run — it drains the
+        prefetch buffer instead of issuing per-table round trips."""
         W = self.dist.n_workers
         n = len(src)
         neg = self.builder.negatives(n)         # full-batch draw: the
@@ -450,7 +499,7 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         if n % chunks:
             # ragged: pow2 shard so the tail's compilation is reused
             s = max(1, 1 << (s - 1).bit_length()) if s > 1 else 1
-        stageds: List[List[Dict[str, Any]]] = []
+        sampled: List[List[Dict[str, Any]]] = []
         for w in self._worker_ids():
             fn = self._sample_fn(w)
             parts = []
@@ -471,14 +520,59 @@ class DistributedContinuousTrainer(ContinuousTrainer):
                 mask[:v] = 1.0
                 seeds = np.concatenate([sc, dc, nc]).astype(np.int64)
                 seed_ts = np.concatenate([tc, tc, tc]).astype(np.float32)
-                parts.append(self.assembler.prefetch(seeds, seed_ts, fn,
-                                                     mask))
-            stageds.append(parts)
+                parts.append(self.assembler.sample(seeds, seed_ts, fn,
+                                                   mask))
+            sampled.append(parts)
+        self._state_prefetch([p for parts in sampled for p in parts],
+                             for_train)
+        self._staged_batches += 1
+        stageds = [[self.assembler.assemble_batch(p) for p in parts]
+                   for parts in sampled]
         if not self.assembler.needs_finalize:
             # memory-less models: batches are complete — stack during
             # prefetch so the host work overlaps the in-flight step
             return {"batch": self._stack(stageds), "parts": None}
         return {"batch": None, "parts": stageds}
+
+    def _state_prefetch(self, sampled_parts: List[Dict[str, Any]],
+                        for_train: bool) -> None:
+        """Union the ids every local shard of this global batch will
+        read and ship the REMOTE subset in one background
+        ``state_batch`` round trip per peer.  Rows the prefetch buffer
+        already staged are filtered out host-side before the wire."""
+        svc = self.state
+        if not callable(getattr(svc, "prefetch_async", None)):
+            return
+        nodes, eids, mems = [], [], []
+        for p in sampled_parts:
+            n_, e_, m_ = self.assembler.collect_ids(p)
+            nodes.append(n_)
+            eids.append(e_)
+            if m_ is not None:
+                mems.append(m_)
+        nodes = (np.unique(np.concatenate(nodes)) if nodes
+                 else np.zeros(0, np.int64))
+        eids = (np.unique(np.concatenate(eids)) if eids
+                else np.zeros(0, np.int64))
+        # staged-buffer filter only — deliberately NOT a device-cache
+        # probe: this batch's own assemblies evict probed rows under
+        # LRU churn, and every such race is a wire fallback that blows
+        # the <= P-1 trips/batch budget.  Features are immutable within
+        # a round, so the buffer ships each remote row at most once
+        # between ingests (pf_reset) regardless.
+        nodes = svc.pf_filter_new("node",
+                                  nodes[svc.remote_mask("node", nodes)])
+        eids = svc.pf_filter_new("edge",
+                                 eids[svc.remote_mask("edge", eids)])
+        mem_ids = None
+        if mems and (self.memory_staleness > 0 or not for_train):
+            # staleness 0 + the commit between prefetch and finalize
+            # would version-reject every buffered row — skip the wasted
+            # bytes; eval rounds never commit, so the buffered copy
+            # serves EXACTLY, and staleness > 0 serves within bound
+            m = np.unique(np.concatenate(mems))
+            mem_ids = m[svc.remote_mask("memory", m)]
+        svc.prefetch_async(node_ids=nodes, eids=eids, mem_ids=mem_ids)
 
     def _stack(self, stageds):
         # multihost stacks on the HOST: the global dp-sharded batch is
@@ -510,7 +604,8 @@ class DistributedContinuousTrainer(ContinuousTrainer):
 
     def _stage_eval(self, item) -> Dict[str, Any]:
         src, dst, ts, _ = item
-        return self._stage_shards(src, dst, ts, micros=1)
+        return self._stage_shards(src, dst, ts, micros=1,
+                                  for_train=False)
 
     def _launch_train(self, item, staged):
         batch = self._sharded_batch(staged)
@@ -540,11 +635,16 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         # every process reaches the fence the same number of times.
         if not self._cross_process_memory():
             return None
+        if self.memory_staleness > 0:
+            # bounded-stale reads: peers may serve memory up to k
+            # commits old, so the read fence (and the commit fence
+            # below) come off the critical path entirely
+            return None
         return lambda: self.transport.barrier("mem-read")
 
     def _complete_train(self, loss, item) -> float:
         loss = super()._complete_train(loss, item)
-        if self._cross_process_memory():
+        if self._cross_process_memory() and self.memory_staleness == 0:
             # nobody gathers batch t+1's memory until every owner has
             # committed batch t's writes into its shard
             self.transport.barrier("mem-commit")
@@ -561,10 +661,20 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         samples the new round until every peer finished writing
         (post)."""
         t0 = time.perf_counter()
+        if callable(getattr(self.state, "pf_reset", None)):
+            # quiesce the prefetch thread and drop buffered rows BEFORE
+            # the fleet fence: no in-flight state_batch may race the
+            # feature rewrites, and nothing pre-ingest survives them
+            self.state.pf_reset()
         self.transport.barrier("pre-ingest")
         eids = self.dispatcher.ingest(batch, self.state)
         self.events.append(batch.ts, eids)
         self._last_eids = eids
+        # write coherence (mirrors the single-host ingest): rows cached
+        # before this batch's features landed must not serve stale zeros
+        self.node_cache.invalidate(
+            np.unique(np.concatenate([batch.src, batch.dst])))
+        self.edge_cache.invalidate(np.unique(eids))
         self._refresh_bytes += self.samplers.refresh()
         self.transport.barrier("post-ingest")
         dt = time.perf_counter() - t0
@@ -580,6 +690,7 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         self._dispatch_base = self.dispatcher.bytes_dispatched
         self._part_hits[:] = 0
         self._part_accesses[:] = 0
+        self._staged_batches = 0
         self._rpc_base = self.transport.stats()
         self._state_base = self.state.stats()
 
@@ -589,6 +700,10 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         base = getattr(self, "_rpc_base", None) or {}
         ss = self.state.stats()
         sbase = getattr(self, "_state_base", None) or {}
+        trips = ss.get("round_trips", 0) - sbase.get("round_trips", 0)
+        per_part = [int(a - b) for a, b in zip(
+            ss.get("wire_bytes_per_part", []),
+            sbase.get("wire_bytes_per_part", []))]
         return DistRoundMetrics(
             rpc_calls=rt["calls"] - base.get("calls", 0),
             rpc_wire_bytes=(rt["bytes_out"] + rt["bytes_in"]
@@ -599,6 +714,23 @@ class DistributedContinuousTrainer(ContinuousTrainer):
             state_bytes=ss["bytes"] - sbase.get("bytes", 0),
             state_wait_s=ss["wait_s"] - sbase.get("wait_s", 0.0),
             state_resident_bytes=ss["resident_bytes"],
+            state_round_trips=trips,
+            state_trips_per_batch=round(
+                trips / max(self._staged_batches, 1), 4),
+            state_staged_batches=self._staged_batches,
+            state_baseline_trips=(ss.get("baseline_trips", 0)
+                                  - sbase.get("baseline_trips", 0)),
+            state_dedup_saved_bytes=(ss.get("dedup_saved_bytes", 0)
+                                     - sbase.get("dedup_saved_bytes", 0)),
+            state_pf_overlap_s=round(
+                ss.get("pf_overlap_s", 0.0)
+                - sbase.get("pf_overlap_s", 0.0), 6),
+            state_pf_hits=ss.get("pf_hits", 0) - sbase.get("pf_hits", 0),
+            state_pf_misses=(ss.get("pf_misses", 0)
+                             - sbase.get("pf_misses", 0)),
+            state_stale_served=(ss.get("stale_served", 0)
+                                - sbase.get("stale_served", 0)),
+            state_wire_bytes_per_part=tuple(per_part),
             ap=ev["ap"], auc_like=ev["acc"], loss=last_loss,
             eval_loss=ev["loss"],
             ingest_s=self.timers["ingest"],

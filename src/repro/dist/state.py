@@ -13,17 +13,37 @@ protocol:
   order at ``register_edges`` time.  Resident bytes are therefore ~1/P
   of a full replica (``resident_bytes``, used-rows-based);
 * an access whose owner is hosted but != ``local_rank`` is a MODELED
-  remote (call/byte-accounted, same as the replicated service) — the
-  in-process trainer stays a faithful cost model;
+  remote (call/byte-accounted post-dedup, same payload the wire would
+  ship) — the in-process trainer stays a faithful cost model;
 * an access whose owner is NOT hosted goes over the transport's state
-  ops (``feat_get``/``feat_put``/``mem_get``/``mem_put``,
-  ``repro.dist.transport``) to the owner process's server, with real
-  wire bytes/wait accounted, and errors re-raised on the caller;
-* ``spmd_writes=True`` (the trainers' mode) DROPS non-hosted writes:
-  every process runs the same deterministic ingest/commit, so the
-  owner derives its own copy locally and the wire carries only reads.
-  ``spmd_writes=False`` routes writes remotely too (non-SPMD callers,
-  property tests).
+  ops to the owner process's server, with real wire bytes/wait
+  accounted and errors re-raised on the caller.
+
+Remote reads are COALESCED (this file's PR-7 layer):
+
+* repeated ids are deduped before the wire (k-hop seed lists repeat
+  hot nodes heavily; each repeat used to ship a full row) and
+  ``dedup_saved_bytes`` counts what the repeats would have cost;
+* :meth:`prefetch_async` packs every remote row an upcoming batch
+  needs — node feats, edge feats, memories — into ONE ``state_batch``
+  round trip per peer, issued on a background thread so the wire wait
+  overlaps the in-flight jitted step.  Results land in a host-side
+  staging buffer; the synchronous read path serves from it and only
+  falls back to per-table wire ops for rows the prefetch missed.
+  ``pf_overlap_s`` reports how much wire time was hidden;
+* ``memory_staleness`` (paper §4.2) bounds how stale a buffered memory
+  row may be, in COMMITS: ``put_memory`` bumps a version counter, a
+  buffered row tagged at version *v* may serve while
+  ``version - v <= memory_staleness``.  The default 0 keeps today's
+  fenced bit-identical behavior (a row prefetched after the last
+  commit is exact); k>0 lets the trainer drop the mem-read/mem-commit
+  fleet barriers for a bounded loss deviation.
+
+``spmd_writes=True`` (the trainers' mode) DROPS non-hosted writes:
+every process runs the same deterministic ingest/commit, so the owner
+derives its own copy locally and the wire carries only reads.
+``spmd_writes=False`` routes writes remotely too (non-SPMD callers,
+property tests).
 
 ``register_edges`` is SPMD metadata either way: every process calls it
 with the same (eids, src) stream, so the replicated eid -> owner map
@@ -31,21 +51,43 @@ with the same (eids, src) stream, so the replicated eid -> owner map
 feature payloads are sharded.
 
 Numerics: reads return exactly what the replicated service would (the
-owner's copy IS the replica's value under SPMD writes), so swapping
-``ReplicatedStateService`` for this class changes footprint and
-traffic, not results — the parity harness (tests/test_multihost.py,
-tests/test_state_service.py) pins sharded == replicated through full
-training rounds, TGN memory path included.
+owner's copy IS the replica's value under SPMD writes; features are
+immutable once written, so buffered copies cannot drift) — the parity
+harness (tests/test_multihost.py, tests/test_state_service.py) pins
+sharded == replicated through full training rounds, TGN memory path
+included, with ``memory_staleness=0``.
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import Any, Dict, Iterable, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.feature_store import StateService, _Dense
 from repro.core.partition import owner_of
+
+
+def pack_state_batch(node_ids=None, eids=None, mem_ids=None) -> Tuple:
+    """Client-side payload of the coalesced ``state_batch`` op:
+    ``(node_ids | None, eids | None, mem_ids | None)`` as int64 arrays.
+    Empty requests collapse to None so absent tables cost no bytes."""
+    def cvt(a):
+        if a is None:
+            return None
+        a = np.asarray(a, np.int64)
+        return a if len(a) else None
+    return cvt(node_ids), cvt(eids), cvt(mem_ids)
+
+
+def unpack_state_batch(reply) -> Tuple:
+    """Server reply -> ``(node_feats, edge_feats, mem, mem_ts)``; None
+    in the slots whose request was absent."""
+    nf, ef, mem, ts = reply
+    def f32(a):
+        return None if a is None else np.asarray(a, np.float32)
+    return f32(nf), f32(ef), f32(mem), f32(ts)
 
 
 class _Shard:
@@ -64,7 +106,9 @@ class ShardedStateService(StateService):
                  d_memory: int = 0, *,
                  hosted: Optional[Iterable[int]] = None,
                  transport=None, local_rank: int = 0,
-                 spmd_writes: bool = True):
+                 spmd_writes: bool = True,
+                 memory_staleness: int = 0,
+                 pf_cap_rows: int = 1 << 18):
         self.n_parts = int(n_parts)
         self.d_node, self.d_edge, self.d_memory = d_node, d_edge, d_memory
         self.shards: Dict[int, _Shard] = {
@@ -73,16 +117,40 @@ class ShardedStateService(StateService):
         self.transport = transport
         self.local_rank = int(local_rank)
         self.spmd_writes = bool(spmd_writes)
+        self.memory_staleness = int(memory_staleness)
+        self.pf_cap_rows = int(pf_cap_rows)
         # replicated edge metadata (every SPMD process derives the same)
         self._edge_owner = np.full(1024, -1, np.int16)
         self._edge_row = np.full(1024, -1, np.int64)
-        # modeled (hosted-but-foreign) + wire (non-hosted) accounting
+        # modeled (hosted-but-foreign) + wire (non-hosted) accounting;
+        # counters are touched from the prefetch thread too, so all
+        # updates go through _acct_lock
+        self._acct_lock = threading.Lock()
         self.model_calls = 0
         self.model_bytes = 0
-        self.wire_calls = 0
+        self.wire_calls = 0           # real round trips (the budget)
         self.wire_bytes = 0
-        self.wire_wait_s = 0.0
+        self.wire_time_s = 0.0        # total on-wire time, any thread
+        self.block_wait_s = 0.0       # critical-path (caller-blocking)
         self.served_calls = 0
+        self.baseline_trips = 0       # what the per-table path would cost
+        self.dedup_saved_bytes = 0
+        self.wire_bytes_per_part = np.zeros(self.n_parts, np.int64)
+        # prefetch machinery: staged remote rows + in-flight jobs
+        self._pf_lock = threading.Lock()
+        self._pf_jobs: List[Tuple[threading.Thread, Dict]] = []
+        self._pf_rows: Dict[str, Dict[int, np.ndarray]] = {
+            "node": {}, "edge": {}}
+        self._pf_mem: Dict[int, Tuple[np.ndarray, float, int]] = {}
+        self.pf_wire_s = 0.0          # wire time on the background thread
+        self.pf_block_s = 0.0         # portion the caller still waited on
+        self.pf_hits = 0
+        self.pf_misses = 0
+        self.stale_served = 0
+        # TGN memory: commit epoch counter + write/read lock (server
+        # threads read while the local trainer commits)
+        self.mem_version = 0
+        self._mem_lock = threading.Lock()
 
     # -- edge metadata ---------------------------------------------------
     def _ensure_edge_meta(self, n: int) -> None:
@@ -117,14 +185,17 @@ class ShardedStateService(StateService):
                 self._edge_row[eids[sel]] = shard.edge_rows + np.arange(k)
                 shard.edge_rows += k
 
-    def _owners(self, table: str, ids: np.ndarray) -> np.ndarray:
+    def owners(self, table: str, ids) -> np.ndarray:
         """Per-id owner partition; -1 for padding/unregistered ids."""
+        ids = np.asarray(ids, np.int64)
         if table == "edge":
             self._ensure_edge_meta(int(ids.max(initial=0)) + 1)
             own = self._edge_owner[np.maximum(ids, 0)].astype(np.int64)
         else:
             own = owner_of(np.maximum(ids, 0), self.n_parts)
         return np.where(ids >= 0, own, -1)
+
+    _owners = owners    # internal alias (pre-PR-7 name)
 
     # -- hosted-shard primitives ----------------------------------------
     def _local_rows(self, p: int, table: str, ids: np.ndarray
@@ -150,23 +221,146 @@ class ShardedStateService(StateService):
 
     def _account_model(self, p: int, *arrays) -> None:
         if p != self.local_rank:
-            self.model_calls += 1
-            self.model_bytes += sum(int(a.nbytes) for a in arrays)
+            with self._acct_lock:
+                self.model_calls += 1
+                self.model_bytes += sum(int(a.nbytes) for a in arrays)
 
-    def _wire(self, fn, *arrays):
+    def _wire(self, p: int, fn, *arrays, background: bool = False):
         if self.transport is None:
             raise RuntimeError(
                 "partition not hosted here and no transport bound")
         t0 = time.perf_counter()
         out = fn()
-        self.wire_wait_s += time.perf_counter() - t0
-        self.wire_calls += 1
-        nbytes = sum(int(a.nbytes) for a in arrays)
+        dt = time.perf_counter() - t0
+        nbytes = sum(int(a.nbytes) for a in arrays if a is not None)
         if out is not None:
             res = out if isinstance(out, tuple) else (out,)
-            nbytes += sum(int(np.asarray(a).nbytes) for a in res)
-        self.wire_bytes += nbytes
+            nbytes += sum(int(np.asarray(a).nbytes) for a in res
+                          if a is not None)
+        with self._acct_lock:
+            self.wire_calls += 1
+            self.wire_bytes += nbytes
+            self.wire_time_s += dt
+            self.wire_bytes_per_part[p] += nbytes
+            if background:
+                self.pf_wire_s += dt
+            else:
+                self.block_wait_s += dt
         return out
+
+    # -- async prefetch ---------------------------------------------------
+    def prefetch_async(self, node_ids=None, eids=None, mem_ids=None
+                       ) -> int:
+        """Stage every listed remote row with ONE coalesced
+        ``state_batch`` round trip per peer, on a background thread.
+
+        Callers pass the union of ids an upcoming batch will read
+        (already filtered to rows worth shipping — see the trainer's
+        device-cache probe); hosted partitions are skipped here.
+        Memory rows are tagged with the CURRENT commit version, so the
+        staleness check at read time is conservative (the owner may
+        commit between issue and landing, making the data fresher than
+        its tag, never staler).  Returns the number of round trips
+        issued."""
+        if self.transport is None:
+            return 0
+        # join the previous batch's jobs first: keeps pf_filter_new
+        # exact and bounds the job list (normally already complete)
+        self._pf_drain()
+        reqs: Dict[int, List] = {}
+        for slot, (table, arr) in enumerate((("node", node_ids),
+                                             ("edge", eids),
+                                             ("memory", mem_ids))):
+            if arr is None:
+                continue
+            arr = np.asarray(arr, np.int64)
+            arr = np.unique(arr[arr >= 0])
+            if not len(arr):
+                continue
+            own = self.owners(table, arr)
+            for p in np.unique(own):
+                p = int(p)
+                if p < 0 or p in self.shards:
+                    continue
+                reqs.setdefault(p, [None, None, None])[slot] = \
+                    arr[own == p]
+        if not reqs:
+            return 0
+        ver = self.mem_version
+        box: Dict[str, Any] = {"error": None}
+        th = threading.Thread(target=self._pf_run, args=(reqs, ver, box),
+                              daemon=True, name="state-prefetch")
+        self._pf_jobs.append((th, box))
+        th.start()
+        return len(reqs)
+
+    def _pf_run(self, reqs: Dict[int, List], ver: int, box: Dict) -> None:
+        try:
+            for p, (nids, peids, mids) in reqs.items():
+                payload = pack_state_batch(nids, peids, mids)
+                out = self._wire(
+                    p, lambda: self.transport.state_batch(p, *payload),
+                    *payload, background=True)
+                nf, ef, mem, mts = unpack_state_batch(out)
+                with self._pf_lock:
+                    self._pf_trim()
+                    if nf is not None:
+                        buf = self._pf_rows["node"]
+                        for i, g in enumerate(payload[0].tolist()):
+                            buf[g] = nf[i]
+                    if ef is not None:
+                        buf = self._pf_rows["edge"]
+                        for i, g in enumerate(payload[1].tolist()):
+                            buf[g] = ef[i]
+                    if mem is not None:
+                        for i, g in enumerate(payload[2].tolist()):
+                            self._pf_mem[g] = (mem[i], float(mts[i]), ver)
+        except Exception as e:           # surfaces at the next drain
+            box["error"] = e
+
+    def _pf_trim(self) -> None:
+        # bound the host-side staging buffer (called under _pf_lock)
+        for buf in (*self._pf_rows.values(), self._pf_mem):
+            if len(buf) > self.pf_cap_rows:
+                buf.clear()
+
+    def _pf_drain(self) -> None:
+        """Join in-flight prefetch jobs; the join time is real
+        critical-path waiting and is accounted as such."""
+        jobs, self._pf_jobs = self._pf_jobs, []
+        if not jobs:
+            return
+        t0 = time.perf_counter()
+        for th, _ in jobs:
+            th.join()
+        dt = time.perf_counter() - t0
+        with self._acct_lock:
+            self.block_wait_s += dt
+            self.pf_block_s += dt
+        for _, box in jobs:
+            if box["error"] is not None:
+                raise box["error"]
+
+    def pf_filter_new(self, table: str, ids: np.ndarray) -> np.ndarray:
+        """Drop ids already staged in the prefetch buffer (features are
+        immutable once written, so a staged row never needs re-shipping
+        within a round)."""
+        buf = self._pf_rows.get(table)
+        if not buf or not len(ids):
+            return ids
+        with self._pf_lock:
+            keep = np.fromiter((int(g) not in buf for g in ids),
+                               bool, len(ids))
+        return ids[keep]
+
+    def pf_reset(self) -> None:
+        """Quiesce prefetch threads and drop all staged rows.  The
+        trainers call this before ingest (feature tables mutate) so no
+        prefetch is in flight anywhere while peers write."""
+        self._pf_drain()
+        with self._pf_lock:
+            for buf in (*self._pf_rows.values(), self._pf_mem):
+                buf.clear()
 
     # -- feature reads ---------------------------------------------------
     def _read(self, table: str, ids, dim: int) -> np.ndarray:
@@ -174,21 +368,58 @@ class ShardedStateService(StateService):
         out = np.zeros((len(ids), dim), np.float32)
         if not len(ids):
             return out
-        own = self._owners(table, ids)
+        own = self.owners(table, ids)
         for p in np.unique(own):
             p = int(p)
             if p < 0:
                 continue
             sel = own == p
             sub = ids[sel]
+            uniq, inv = np.unique(sub, return_inverse=True)
+            if p != self.local_rank:
+                # what the pre-coalescing per-table path would have
+                # cost this foreign owner: one (modeled or real) round
+                # trip per read invocation, full repeats on the wire
+                with self._acct_lock:
+                    self.baseline_trips += 1
+                    self.dedup_saved_bytes += \
+                        (len(sub) - len(uniq)) * (8 + dim * 4)
             if p in self.shards:
-                vals = self._local_get(p, table, sub)
-                self._account_model(p, sub, vals)
+                vals = self._local_get(p, table, uniq)
+                self._account_model(p, uniq, vals)
             else:
-                vals = self._wire(
-                    lambda: self.transport.feat_get(p, table, sub), sub)
-            out[sel] = vals
+                vals = self._remote_rows(p, table, uniq, dim)
+            out[sel] = vals[inv]
         return out
+
+    def _remote_rows(self, p: int, table: str, uniq: np.ndarray,
+                     dim: int) -> np.ndarray:
+        """Serve deduped remote rows: prefetch buffer first, one wire
+        fallback for whatever it missed (kept in the buffer for the
+        batch's remaining shards)."""
+        self._pf_drain()
+        rows = np.zeros((len(uniq), dim), np.float32)
+        miss_mask = np.ones(len(uniq), bool)
+        buf = self._pf_rows[table]
+        with self._pf_lock:
+            for i, g in enumerate(uniq.tolist()):
+                r = buf.get(g)
+                if r is not None:
+                    rows[i] = r
+                    miss_mask[i] = False
+        miss = uniq[miss_mask]
+        with self._acct_lock:
+            self.pf_hits += len(uniq) - len(miss)
+            self.pf_misses += len(miss)
+        if len(miss):
+            vals = self._wire(
+                p, lambda: self.transport.feat_get(p, table, miss), miss)
+            rows[miss_mask] = vals
+            with self._pf_lock:
+                for i, g in zip(np.nonzero(miss_mask)[0].tolist(),
+                                miss.tolist()):
+                    buf[g] = rows[i]
+        return rows
 
     def get_node_feats(self, ids) -> np.ndarray:
         return self._read("node", ids, self.d_node)
@@ -202,7 +433,16 @@ class ShardedStateService(StateService):
         vals = np.asarray(vals, np.float32)
         if not len(ids):
             return
-        own = self._owners(table, ids)
+        # a rewrite invalidates any staged copy of these rows: the SPMD
+        # trainers only ever rewrite idempotently (and pf_reset before
+        # ingest), but the service must stay correct for arbitrary
+        # writers — reads after a write see the written value
+        buf = self._pf_rows[table]
+        if buf:
+            with self._pf_lock:
+                for g in ids.tolist():
+                    buf.pop(g, None)
+        own = self.owners(table, ids)
         for p in np.unique(own):
             p = int(p)
             if p < 0:
@@ -218,7 +458,7 @@ class ShardedStateService(StateService):
                 continue
             else:
                 self._wire(
-                    lambda: self.transport.feat_put(p, table, sub, v),
+                    p, lambda: self.transport.feat_put(p, table, sub, v),
                     sub, v)
 
     def put_node_feats(self, ids, feats) -> None:
@@ -240,24 +480,71 @@ class ShardedStateService(StateService):
         ts = np.zeros(len(ids), np.float32)
         if not len(ids):
             return mem, ts
-        own = self._owners("memory", ids)
+        own = self.owners("memory", ids)
         for p in np.unique(own):
             p = int(p)
             if p < 0:
                 continue
             sel = own == p
             sub = ids[sel]
+            uniq, inv = np.unique(sub, return_inverse=True)
+            if p != self.local_rank:
+                with self._acct_lock:
+                    self.baseline_trips += 1
+                    self.dedup_saved_bytes += \
+                        (len(sub) - len(uniq)) * (12 + self.d_memory * 4)
             if p in self.shards:
-                rows = sub // self.n_parts
-                m = self.shards[p].memory.get(rows)
-                t = self.shards[p].mem_ts.get(rows)[:, 0]
-                self._account_model(p, sub, m, t)
+                rows = uniq // self.n_parts
+                with self._mem_lock:
+                    m = self.shards[p].memory.get(rows)
+                    t = self.shards[p].mem_ts.get(rows)[:, 0]
+                self._account_model(p, uniq, m, t)
             else:
-                m, t = self._wire(
-                    lambda: self.transport.mem_get(p, sub), sub)
-            mem[sel] = m
-            ts[sel] = t
+                m, t = self._remote_memory(p, uniq)
+            mem[sel] = m[inv]
+            ts[sel] = t[inv]
         return mem, ts
+
+    def _remote_memory(self, p: int, uniq: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Deduped remote memory rows: the prefetched copy may serve a
+        row while it is at most ``memory_staleness`` commits old; the
+        rest take one wire fallback (re-staged at the current
+        version)."""
+        self._pf_drain()
+        m_rows = np.zeros((len(uniq), self.d_memory), np.float32)
+        t_rows = np.zeros(len(uniq), np.float32)
+        miss_mask = np.ones(len(uniq), bool)
+        stale = 0
+        with self._pf_lock:
+            for i, g in enumerate(uniq.tolist()):
+                ent = self._pf_mem.get(g)
+                if ent is None:
+                    continue
+                m_r, t_r, ver = ent
+                if self.mem_version - ver > self.memory_staleness:
+                    continue    # too stale: refetch
+                m_rows[i] = m_r
+                t_rows[i] = t_r
+                miss_mask[i] = False
+                if self.mem_version > ver:
+                    stale += 1
+        miss = uniq[miss_mask]
+        with self._acct_lock:
+            self.pf_hits += len(uniq) - len(miss)
+            self.pf_misses += len(miss)
+            self.stale_served += stale
+        if len(miss):
+            ver = self.mem_version
+            m, t = self._wire(
+                p, lambda: self.transport.mem_get(p, miss), miss)
+            m_rows[miss_mask] = m
+            t_rows[miss_mask] = t
+            with self._pf_lock:
+                for i, g in zip(np.nonzero(miss_mask)[0].tolist(),
+                                miss.tolist()):
+                    self._pf_mem[g] = (m_rows[i], float(t_rows[i]), ver)
+        return m_rows, t_rows
 
     def put_memory(self, ids, mem, ts) -> None:
         self._require_memory()
@@ -266,7 +553,10 @@ class ShardedStateService(StateService):
         ts = np.asarray(ts, np.float64)
         if not len(ids):
             return
-        own = self._owners("memory", ids)
+        # one commit epoch per put: the staleness bound is measured in
+        # these (every SPMD process commits in lockstep)
+        self.mem_version += 1
+        own = self.owners("memory", ids)
         for p in np.unique(own):
             p = int(p)
             if p < 0:
@@ -275,14 +565,15 @@ class ShardedStateService(StateService):
             sub, m, t = ids[sel], mem[sel], ts[sel]
             if p in self.shards:
                 rows = sub // self.n_parts
-                self.shards[p].memory.set(rows, m)
-                self.shards[p].mem_ts.set(rows, t[:, None])
+                with self._mem_lock:
+                    self.shards[p].memory.set(rows, m)
+                    self.shards[p].mem_ts.set(rows, t[:, None])
                 self._account_model(p, sub, m, t)
             elif self.spmd_writes:
                 continue
             else:
                 self._wire(
-                    lambda: self.transport.mem_put(p, sub, m, t),
+                    p, lambda: self.transport.mem_put(p, sub, m, t),
                     sub, m, t)
 
     # -- server-side entry points (transport op handlers) ----------------
@@ -295,12 +586,11 @@ class ShardedStateService(StateService):
                 f"{sorted(self.shards)} but was asked for {bad} "
                 f"(routing bug or stale owner map on the caller)")
 
-    def serve_feat_get(self, table: str, ids) -> np.ndarray:
-        self.served_calls += 1
+    def _serve_feat(self, table: str, ids) -> np.ndarray:
         ids = np.asarray(ids, np.int64)
         dim = self.d_node if table == "node" else self.d_edge
         out = np.zeros((len(ids), dim), np.float32)
-        own = self._owners(table, ids)
+        own = self.owners(table, ids)
         self._check_hosted(own)
         for p in np.unique(own):
             if p < 0:
@@ -309,11 +599,15 @@ class ShardedStateService(StateService):
             out[sel] = self._local_get(int(p), table, ids[sel])
         return out
 
+    def serve_feat_get(self, table: str, ids) -> np.ndarray:
+        self.served_calls += 1
+        return self._serve_feat(table, ids)
+
     def serve_feat_put(self, table: str, ids, vals) -> None:
         self.served_calls += 1
         ids = np.asarray(ids, np.int64)
         vals = np.asarray(vals, np.float32)
-        own = self._owners(table, ids)
+        own = self.owners(table, ids)
         self._check_hosted(own)
         for p in np.unique(own):
             if p < 0:
@@ -321,11 +615,10 @@ class ShardedStateService(StateService):
             sel = own == p
             self._local_put(int(p), table, ids[sel], vals[sel])
 
-    def serve_mem_get(self, ids) -> Tuple[np.ndarray, np.ndarray]:
-        self.served_calls += 1
+    def _serve_mem(self, ids) -> Tuple[np.ndarray, np.ndarray]:
         self._require_memory()
         ids = np.asarray(ids, np.int64)
-        own = self._owners("memory", ids)
+        own = self.owners("memory", ids)
         self._check_hosted(own)
         mem = np.zeros((len(ids), self.d_memory), np.float32)
         ts = np.zeros(len(ids), np.float32)
@@ -334,9 +627,14 @@ class ShardedStateService(StateService):
                 continue
             sel = own == p
             rows = ids[sel] // self.n_parts
-            mem[sel] = self.shards[int(p)].memory.get(rows)
-            ts[sel] = self.shards[int(p)].mem_ts.get(rows)[:, 0]
+            with self._mem_lock:
+                mem[sel] = self.shards[int(p)].memory.get(rows)
+                ts[sel] = self.shards[int(p)].mem_ts.get(rows)[:, 0]
         return mem, ts
+
+    def serve_mem_get(self, ids) -> Tuple[np.ndarray, np.ndarray]:
+        self.served_calls += 1
+        return self._serve_mem(ids)
 
     def serve_mem_put(self, ids, mem, ts) -> None:
         self.served_calls += 1
@@ -344,15 +642,29 @@ class ShardedStateService(StateService):
         ids = np.asarray(ids, np.int64)
         mem = np.asarray(mem, np.float32)
         ts = np.asarray(ts, np.float64)
-        own = self._owners("memory", ids)
+        own = self.owners("memory", ids)
         self._check_hosted(own)
         for p in np.unique(own):
             if p < 0:
                 continue
             sel = own == p
             rows = ids[sel] // self.n_parts
-            self.shards[int(p)].memory.set(rows, mem[sel])
-            self.shards[int(p)].mem_ts.set(rows, ts[sel][:, None])
+            with self._mem_lock:
+                self.shards[int(p)].memory.set(rows, mem[sel])
+                self.shards[int(p)].mem_ts.set(rows, ts[sel][:, None])
+
+    def serve_state_batch(self, node_ids, eids, mem_ids) -> Tuple:
+        """The coalesced read: one frame answers a peer's node-feat +
+        edge-feat + memory requests together."""
+        self.served_calls += 1
+        nf = ef = mem = ts = None
+        if node_ids is not None and len(node_ids):
+            nf = self._serve_feat("node", node_ids)
+        if eids is not None and len(eids):
+            ef = self._serve_feat("edge", eids)
+        if mem_ids is not None and len(mem_ids):
+            mem, ts = self._serve_mem(mem_ids)
+        return nf, ef, mem, ts
 
     # -- accounting ------------------------------------------------------
     def resident_bytes(self) -> int:
@@ -366,11 +678,23 @@ class ShardedStateService(StateService):
         return total
 
     def stats(self) -> Dict[str, Any]:
-        return {"mode": "sharded",
-                "calls": self.model_calls + self.wire_calls,
-                "bytes": self.model_bytes + self.wire_bytes,
-                "wait_s": round(self.wire_wait_s, 6),
-                "wire_calls": self.wire_calls,
-                "wire_bytes": self.wire_bytes,
-                "served_calls": self.served_calls,
-                "resident_bytes": self.resident_bytes()}
+        with self._acct_lock:
+            return {"mode": "sharded",
+                    "calls": self.model_calls + self.wire_calls,
+                    "bytes": self.model_bytes + self.wire_bytes,
+                    "wait_s": round(self.block_wait_s, 6),
+                    "wire_calls": self.wire_calls,
+                    "wire_bytes": self.wire_bytes,
+                    "served_calls": self.served_calls,
+                    "round_trips": self.wire_calls,
+                    "baseline_trips": self.baseline_trips,
+                    "dedup_saved_bytes": self.dedup_saved_bytes,
+                    "pf_wire_s": round(self.pf_wire_s, 6),
+                    "pf_overlap_s": round(
+                        max(0.0, self.pf_wire_s - self.pf_block_s), 6),
+                    "pf_hits": self.pf_hits,
+                    "pf_misses": self.pf_misses,
+                    "stale_served": self.stale_served,
+                    "wire_bytes_per_part": [
+                        int(b) for b in self.wire_bytes_per_part],
+                    "resident_bytes": self.resident_bytes()}

@@ -26,8 +26,9 @@ transport concern, injected into
     peers while its own trainer loop runs.
 
 Every RPC op — ``hop``, ``ping``, ``close``, and the state ops
-``feat_get``/``feat_put``/``mem_get``/``mem_put`` — lives in ONE
-registered op table (:data:`OPS`) shared by server dispatch and client
+``feat_get``/``feat_put``/``mem_get``/``mem_put`` plus the coalesced
+``state_batch`` (all of a batch's node-feat + edge-feat + memory reads
+for one peer in a single frame) — lives in ONE registered op table (:data:`OPS`) shared by server dispatch and client
 validation, so the two sides cannot drift: a client call with an
 unregistered op fails locally, and a server receiving one (version
 skew, corrupted frame) replies an error that re-raises on the caller.
@@ -154,6 +155,13 @@ def _op_mem_put(server, ids, mem, ts):
     return _state_of(server).serve_mem_put(ids, mem, ts)
 
 
+@OPS.register("state_batch", group="state")
+def _op_state_batch(server, node_ids, eids, mem_ids):
+    # the coalesced read: ALL of a batch's node-feat + edge-feat +
+    # memory requests for this peer in ONE framed round trip
+    return _state_of(server).serve_state_batch(node_ids, eids, mem_ids)
+
+
 # ---------------------------------------------------------------------------
 # Transport interface
 # ---------------------------------------------------------------------------
@@ -185,25 +193,28 @@ class SamplingTransport:
         raise NotImplementedError(
             "local transport never routes a remote hop")
 
-    # -- state ops (ShardedStateService's wire; owners are local with
-    # -- LocalTransport, so these are never reached in-process) ---------
+    # -- state ops (ShardedStateService's wire) -------------------------
     def feat_get(self, machine: int, table: str, ids: np.ndarray):
         raise NotImplementedError(
-            "local transport never routes a remote state read")
+            "transport does not route remote state reads")
 
     def feat_put(self, machine: int, table: str, ids: np.ndarray,
                  vals: np.ndarray):
         raise NotImplementedError(
-            "local transport never routes a remote state write")
+            "transport does not route remote state writes")
 
     def mem_get(self, machine: int, ids: np.ndarray):
         raise NotImplementedError(
-            "local transport never routes a remote state read")
+            "transport does not route remote state reads")
 
     def mem_put(self, machine: int, ids: np.ndarray, mem: np.ndarray,
                 ts: np.ndarray):
         raise NotImplementedError(
-            "local transport never routes a remote state write")
+            "transport does not route remote state writes")
+
+    def state_batch(self, machine: int, node_ids, eids, mem_ids):
+        raise NotImplementedError(
+            "transport does not route remote state reads")
 
     def barrier(self, tag: str) -> None:
         pass
@@ -217,7 +228,54 @@ class SamplingTransport:
 
 
 class LocalTransport(SamplingTransport):
-    """Everything in-process: the 1-process degenerate case."""
+    """Everything in-process: the 1-process degenerate case.
+
+    The trainers' in-process state services host every partition, so
+    their reads never reach the transport.  The state ops below exist
+    for MULTI-SERVICE single-process setups (property/parity tests):
+    ``bind_state`` registers each service under its ``local_rank`` and
+    the ops dispatch straight into the target service's ``serve_*``
+    entry points — same code path a remote peer would execute, minus
+    the socket.
+    """
+
+    def __init__(self):
+        self._states: Dict[int, Any] = {}
+
+    def bind_state(self, state) -> None:
+        self._states[int(getattr(state, "local_rank", 0))] = state
+
+    def _state_for(self, machine: int):
+        try:
+            return self._states[machine]
+        except KeyError:
+            raise RuntimeError(
+                f"no state service bound for machine {machine} on this "
+                f"LocalTransport (bound: {sorted(self._states)})"
+            ) from None
+
+    def feat_get(self, machine: int, table: str, ids: np.ndarray):
+        return self._state_for(machine).serve_feat_get(
+            table, np.asarray(ids, np.int64))
+
+    def feat_put(self, machine: int, table: str, ids: np.ndarray,
+                 vals: np.ndarray):
+        return self._state_for(machine).serve_feat_put(
+            table, np.asarray(ids, np.int64), np.asarray(vals, np.float32))
+
+    def mem_get(self, machine: int, ids: np.ndarray):
+        return self._state_for(machine).serve_mem_get(
+            np.asarray(ids, np.int64))
+
+    def mem_put(self, machine: int, ids: np.ndarray, mem: np.ndarray,
+                ts: np.ndarray):
+        return self._state_for(machine).serve_mem_put(
+            np.asarray(ids, np.int64), np.asarray(mem, np.float32),
+            np.asarray(ts, np.float64))
+
+    def state_batch(self, machine: int, node_ids, eids, mem_ids):
+        return self._state_for(machine).serve_state_batch(
+            node_ids, eids, mem_ids)
 
 
 class RpcSamplingServer:
@@ -413,6 +471,13 @@ class RpcTransport(SamplingTransport):
                           np.asarray(ids, np.int64),
                           np.asarray(mem, np.float32),
                           np.asarray(ts, np.float64))
+
+    def state_batch(self, machine: int, node_ids, eids, mem_ids):
+        """One coalesced round trip: every table's reads for one peer
+        in a single frame.  Any of the three id arrays may be None."""
+        cvt = lambda a: None if a is None else np.asarray(a, np.int64)
+        return self._call(machine, "state_batch",
+                          cvt(node_ids), cvt(eids), cvt(mem_ids))
 
     def barrier(self, tag: str) -> None:
         """Host barrier over the jax.distributed coordination service.

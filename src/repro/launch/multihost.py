@@ -337,7 +337,8 @@ def _default_run_cfg(args) -> Dict[str, Any]:
                        alpha=2.2, seed=7),
         "dist": {"collective": args.collective},
         "trainer": dict(threshold=32, cache_ratio=0.1, lr=1e-3,
-                        seed=0, overlap=True, state=args.state),
+                        seed=0, overlap=True, state=args.state,
+                        memory_staleness=args.memory_staleness),
         "warm": warm, "round_size": rnd, "rounds": args.rounds,
         "epochs": args.epochs,
         "replay_ratio": 0.2, "replay_round": args.rounds - 1,
@@ -370,6 +371,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="feature/TGN-memory state service: replicated "
                          "per process, or owner-sharded over the "
                          "transport's state RPCs")
+    ap.add_argument("--memory-staleness", type=int, default=0,
+                    help="sharded TGN memory only: serve remote memory "
+                         "reads from the prefetched copy up to k "
+                         "commits stale (0 = fenced, exact; k > 0 "
+                         "drops the mem-read/commit barriers for a "
+                         "bounded loss deviation)")
     ap.add_argument("--timeout", type=float, default=900.0)
     args = ap.parse_args(argv)
 

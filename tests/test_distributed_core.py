@@ -1,9 +1,9 @@
-"""Partitioning, distributed feature store, static sampling schedule."""
+"""Partitioning, replicated state service, static sampling schedule."""
 import numpy as np
 import pytest
 
 from repro.core.dgraph import DynamicGraph
-from repro.core.feature_store import DistributedFeatureStore
+from repro.core.feature_store import ReplicatedStateService
 from repro.core.partition import Dispatcher, GraphPartition, owner_of
 from repro.core.sampling import oracle_sample
 from repro.core.scheduler import DistributedSamplerSystem
@@ -90,32 +90,44 @@ def test_static_schedule_load_balance():
 
 def test_feature_store_partitioned_roundtrip():
     P = 4
-    fs = DistributedFeatureStore(P, d_node=16, d_edge=8, d_memory=12,
-                                 local_rank=0)
+    fs = ReplicatedStateService(P, d_node=16, d_edge=8, d_memory=12,
+                                local_rank=0)
     ids = np.arange(100)
     feats = np.random.default_rng(0).normal(size=(100, 16)).astype(
         np.float32)
-    fs.put_node_features(ids, feats)
-    got = fs.get_node_features(ids)
+    fs.put_node_feats(ids, feats)
+    got = fs.get_node_feats(ids)
     np.testing.assert_allclose(got, feats)
     assert fs.remote_bytes > 0            # 3/4 of reads were remote
 
     eids = np.arange(50)
     src = np.arange(50) * 3
     ef = np.random.default_rng(1).normal(size=(50, 8)).astype(np.float32)
-    fs.put_edge_features(eids, src, ef)
-    np.testing.assert_allclose(fs.get_edge_features(eids), ef)
+    fs.register_edges(eids, src)
+    fs.put_edge_feats(eids, ef)
+    np.testing.assert_allclose(fs.get_edge_feats(eids), ef)
 
     mem = np.random.default_rng(2).normal(size=(100, 12)).astype(
         np.float32)
     fs.put_memory(ids, mem, np.arange(100, dtype=np.float64))
-    np.testing.assert_allclose(fs.get_memory(ids), mem)
-    np.testing.assert_allclose(fs.get_memory_ts(ids), np.arange(100))
+    got_mem, got_ts = fs.get_memory(ids)
+    np.testing.assert_allclose(got_mem, mem)
+    np.testing.assert_allclose(got_ts, np.arange(100))
+
+    # placement surface: node owners are id % P; the cacheable mask
+    # excludes local_rank's own rows and padding lanes
+    own = fs.owners("node", ids)
+    np.testing.assert_array_equal(own, ids % P)
+    rm = fs.remote_mask("node", np.array([-1, 0, 1, 4, 5]))
+    np.testing.assert_array_equal(rm, [False, False, True, False, True])
+    # edge owners follow the registered src hash; unregistered eids -1
+    eown = fs.owners("edge", np.array([0, 1, 999]))
+    np.testing.assert_array_equal(eown, [0, 3, -1])
 
 
 def test_missing_ids_return_zeros():
-    fs = DistributedFeatureStore(2, d_node=4, d_edge=4)
-    out = fs.get_node_features(np.array([-1, 999999]))
+    fs = ReplicatedStateService(2, d_node=4, d_edge=4)
+    out = fs.get_node_feats(np.array([-1, 999999]))
     assert (out == 0).all()
 
 

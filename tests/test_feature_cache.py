@@ -231,6 +231,63 @@ def test_fetch_records_last_hit_mask():
     np.testing.assert_array_equal(c.last_hit, [True, True, False])
 
 
+def test_cacheable_mask_keeps_local_rows_out():
+    """Placement-aware fetch: rows flagged non-cacheable are returned
+    correctly but never inserted, never counted in hit-rate stats, and
+    tallied as ``bypassed`` — the sharded trainer's remote-only cache
+    policy (local-shard rows are a host lookup, not worth capacity)."""
+    c = FeatureCache(capacity=8, dim=4, id_space=100, policy="lru",
+                     lam=1.0)
+    ids = np.array([1, 2, 3, 4], np.int32)
+    cacheable = np.array([True, False, True, False])
+    out = c.fetch(ids, lambda m: _feat(m, 4), cacheable=cacheable)
+    np.testing.assert_allclose(np.asarray(out), _feat(ids, 4))
+    assert c.contents() == {1, 3}       # masked-out rows not inserted
+    assert c.accesses == 2              # only cacheable rows counted
+    assert c.hits == 0
+    assert c.bypassed == 2
+    # second pass: cacheable rows hit; bypassed rows still fetched
+    fetched = []
+    out = c.fetch(ids, lambda m: (fetched.append(np.asarray(m)),
+                                  _feat(m, 4))[1], cacheable=cacheable)
+    np.testing.assert_allclose(np.asarray(out), _feat(ids, 4))
+    assert c.hits == 2 and c.accesses == 4 and c.bypassed == 4
+    np.testing.assert_array_equal(np.sort(fetched[0]), [2, 4])
+    np.testing.assert_array_equal(c.last_hit, [True, False, True, False])
+    # probe(): host-side membership check, no stats side effects
+    np.testing.assert_array_equal(
+        c.probe(np.array([1, 2, 3, -1, 999])),
+        [True, False, True, False, False])
+    assert c.accesses == 4              # probe counted nothing
+    # unmasked call on the same cache keeps the old all-rows contract
+    c2 = FeatureCache(capacity=8, dim=4, id_space=100, policy="lru",
+                     lam=1.0)
+    c2.fetch(ids, lambda m: _feat(m, 4))
+    assert c2.accesses == 4 and c2.bypassed == 0
+    assert c2.contents() == {1, 2, 3, 4}
+
+
+def test_invalidate_drops_rewritten_rows():
+    """Write coherence: ingest invalidates the ids it (re)writes so a
+    row cached while still featureless (zeros) never outlives the
+    store learning the real value."""
+    c = FeatureCache(capacity=8, dim=4, id_space=100, policy="lru",
+                     lam=1.0)
+    zeros = lambda m: np.zeros((len(m), 4), np.float32)
+    c.fetch(np.array([1, 2, 3], np.int32), zeros)   # pre-write zeros
+    assert c.contents() == {1, 2, 3}
+    assert c.invalidate(np.array([2, 3, 50])) == 2  # 50 wasn't cached
+    assert c.contents() == {1}
+    np.testing.assert_array_equal(c.probe(np.array([1, 2, 3])),
+                                  [True, False, False])
+    # next fetch re-reads the store's (now real) value and re-caches
+    out = c.fetch(np.array([2], np.int32), lambda m: _feat(m, 4))
+    np.testing.assert_allclose(np.asarray(out), _feat(np.array([2]), 4))
+    assert c.contents() == {1, 2}
+    # idempotent on already-absent ids
+    assert c.invalidate(np.array([99, -1])) == 0
+
+
 def test_pallas_cache_gather_matches_ref():
     from repro.kernels.cache_gather.ops import cache_gather_pallas
     from repro.kernels.cache_gather.ref import cache_gather_ref

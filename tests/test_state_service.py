@@ -11,16 +11,19 @@ implementations —
 
 The tests pin: interchangeability (interleaved put/get equivalence,
 property-tested, including over a REAL RpcTransport pair), the ~1/P
-resident footprint, remote-error re-raising, the one-PR deprecation
-shims, and in-process trainer parity with ``state="sharded"``.
+resident footprint, remote-error re-raising, the coalesced
+``state_batch`` op (bit-identical to the per-table path over both
+transports), client-side dedup, async prefetch serving without extra
+round trips, the bounded-staleness memory contract, and in-process
+trainer parity with ``state="sharded"``.
 """
 import numpy as np
 import pytest
 
-from repro.core.feature_store import (DistributedFeatureStore,
-                                      ReplicatedStateService)
-from repro.dist.state import ShardedStateService
-from repro.dist.transport import OPS, RpcTransport
+from repro.core.feature_store import ReplicatedStateService
+from repro.dist.state import (ShardedStateService, pack_state_batch,
+                              unpack_state_batch)
+from repro.dist.transport import OPS, LocalTransport, RpcTransport
 from repro.launch import multihost
 
 P = 2
@@ -210,48 +213,199 @@ def test_client_rejects_unregistered_ops(rpc_pair):
         ta._call(1, "nope")
     # the shared table is the single source of truth for both sides
     for op in ("ping", "close", "hop", "feat_get", "feat_put",
-               "mem_get", "mem_put"):
+               "mem_get", "mem_put", "state_batch"):
         assert op in OPS
     assert OPS.group("hop") == "sample"
     assert OPS.group("feat_get") == "state"
+    assert OPS.group("state_batch") == "state"
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims (one-PR migration surface)
+# coalesced state_batch op: one frame == three per-table round trips
+# ---------------------------------------------------------------------------
+
+D_NODE, D_EDGE, D_MEMORY = 6, 4, 5
+N_IDS = 64
+
+
+def _populated_pair(t_of):
+    """Two single-shard services (one per partition) + the replicated
+    reference, all holding identical data.  ``t_of(p)`` is the
+    transport process p uses — the same LocalTransport for both in the
+    in-process variant, an RpcTransport each over TCP."""
+    svc = {}
+    for p in range(P):
+        svc[p] = ShardedStateService(
+            P, d_node=D_NODE, d_edge=D_EDGE, d_memory=D_MEMORY,
+            hosted=(p,), transport=t_of(p), local_rank=p)
+        t_of(p).bind_state(svc[p])
+    ref = ReplicatedStateService(P, d_node=D_NODE, d_edge=D_EDGE,
+                                 d_memory=D_MEMORY)
+    rng = np.random.default_rng(42)
+    ids = np.arange(N_IDS)
+    nf = rng.normal(size=(N_IDS, D_NODE)).astype(np.float32)
+    eids = np.arange(48)
+    src = rng.integers(0, N_IDS, 48)
+    ef = rng.normal(size=(48, D_EDGE)).astype(np.float32)
+    mem = rng.normal(size=(N_IDS, D_MEMORY)).astype(np.float32)
+    mts = rng.uniform(0, 50, N_IDS)
+    # spmd_writes: each service persists its own shard locally
+    for s in (ref, svc[0], svc[1]):
+        s.put_node_feats(ids, nf)
+        s.register_edges(eids, src)
+        s.put_edge_feats(eids, ef)
+        s.put_memory(ids, mem, mts)
+    return svc, ref, eids
+
+
+def _check_state_batch_roundtrip(t, svc, ref, eids_all, seed):
+    """Property body: an arbitrary mix of node/edge/memory requests
+    (repeats included, any subset of tables absent) answered by ONE
+    ``state_batch`` frame is bit-identical to the per-table ops and to
+    the replicated reference."""
+    rng = np.random.default_rng(seed)
+    caller, peer = svc[0], 1
+
+    def draw(table, pool):
+        k = int(rng.integers(0, 10))
+        sub = (rng.choice(pool, k).astype(np.int64) if k
+               else np.zeros(0, np.int64))
+        return sub[caller.owners(table, sub) == peer]
+
+    nids = draw("node", np.arange(N_IDS))
+    peids = draw("edge", eids_all)
+    mids = draw("memory", np.arange(N_IDS))
+    payload = pack_state_batch(nids, peids, mids)
+    assert unpack_state_batch((None, None, None, None)) == \
+        (None, None, None, None)
+    nf, ef, mem, ts = unpack_state_batch(t.state_batch(peer, *payload))
+    if len(nids):
+        np.testing.assert_array_equal(nf, t.feat_get(peer, "node", nids))
+        np.testing.assert_array_equal(nf, ref.get_node_feats(nids))
+    else:
+        assert nf is None and payload[0] is None
+    if len(peids):
+        np.testing.assert_array_equal(ef, t.feat_get(peer, "edge", peids))
+        np.testing.assert_array_equal(ef, ref.get_edge_feats(peids))
+    else:
+        assert ef is None and payload[1] is None
+    if len(mids):
+        m_w, t_w = t.mem_get(peer, mids)
+        np.testing.assert_array_equal(mem, m_w)
+        np.testing.assert_array_equal(ts, t_w)
+        m_r, t_r = ref.get_memory(mids)
+        np.testing.assert_array_equal(mem, m_r)
+        np.testing.assert_array_equal(ts, t_r)
+    else:
+        assert mem is None and ts is None and payload[2] is None
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_state_batch_matches_per_table_ops_local(seed):
+    lt = LocalTransport()
+    svc, ref, eids_all = _populated_pair(lambda p: lt)
+    _check_state_batch_roundtrip(lt, svc, ref, eids_all, seed)
+
+
+@settings(max_examples=8, deadline=None, **_SETTINGS_KW)
+@given(st.integers(0, 10_000))
+def test_state_batch_matches_per_table_ops_rpc(rpc_pair, seed):
+    ta, tb = rpc_pair
+    svc, ref, eids_all = _populated_pair(
+        lambda p: ta if p == 0 else tb)
+    _check_state_batch_roundtrip(ta, svc, ref, eids_all, seed)
+
+
+# ---------------------------------------------------------------------------
+# client-side dedup + async prefetch + bounded-stale memory
 # ---------------------------------------------------------------------------
 
 
-def test_deprecated_store_shims_still_work():
-    fs = DistributedFeatureStore(2, d_node=4, d_edge=3, d_memory=5,
-                                 local_rank=0)
-    ids = np.arange(10)
-    feats = np.arange(40, dtype=np.float32).reshape(10, 4)
-    with pytest.warns(DeprecationWarning, match="put_node_features"):
-        fs.put_node_features(ids, feats)
-    with pytest.warns(DeprecationWarning, match="get_node_features"):
-        old = fs.get_node_features(ids)
-    np.testing.assert_array_equal(old, fs.get_node_feats(ids))
+def test_repeated_ids_dedup_before_wire():
+    lt = LocalTransport()
+    svc, ref, _ = _populated_pair(lambda p: lt)
+    s0 = svc[0]
+    base = s0.stats()
+    ids = np.full(10, 1, np.int64)      # node 1: owner = partition 1
+    out = s0.get_node_feats(ids)
+    np.testing.assert_array_equal(out, ref.get_node_feats(ids))
+    st_ = s0.stats()
+    # ONE wire round trip, ONE row on it; the 9 repeats never shipped
+    assert st_["wire_calls"] - base["wire_calls"] == 1
+    assert st_["wire_bytes"] - base["wire_bytes"] == 8 + D_NODE * 4
+    assert st_["dedup_saved_bytes"] - base["dedup_saved_bytes"] \
+        == 9 * (8 + D_NODE * 4)
 
-    eids, src = np.arange(6), np.arange(6) * 3
-    ef = np.ones((6, 3), np.float32)
-    with pytest.warns(DeprecationWarning, match="put_edge_features"):
-        fs.put_edge_features(eids, src, ef)
-    with pytest.warns(DeprecationWarning, match="get_edge_features"):
-        np.testing.assert_array_equal(fs.get_edge_features(eids),
-                                      fs.get_edge_feats(eids))
 
-    mem = np.full((10, 5), 2.0, np.float32)
-    fs.put_memory(ids, mem, np.arange(10, dtype=np.float64))
-    with pytest.warns(DeprecationWarning, match="get_memory"):
-        only_mem = fs.get_memory(ids)       # old mem-only return
-    np.testing.assert_array_equal(only_mem, mem)
-    with pytest.warns(DeprecationWarning, match="get_memory_ts"):
-        np.testing.assert_array_equal(fs.get_memory_ts(ids),
-                                      np.arange(10))
-    # the NEW protocol on the same object is symmetric
-    m, t = ReplicatedStateService.get_memory(fs, ids)
-    np.testing.assert_array_equal(m, mem)
-    np.testing.assert_array_equal(t, np.arange(10))
+def test_prefetch_serves_reads_without_new_round_trips():
+    lt = LocalTransport()
+    svc, ref, eids_all = _populated_pair(lambda p: lt)
+    s0 = svc[0]
+    nodes = np.arange(N_IDS)
+    r_nodes = nodes[s0.remote_mask("node", nodes)]
+    r_eids = eids_all[s0.remote_mask("edge", eids_all)]
+    assert s0.prefetch_async(node_ids=r_nodes, eids=r_eids,
+                             mem_ids=r_nodes) == 1   # ONE frame: peer 1
+    nf = s0.get_node_feats(r_nodes)
+    ef = s0.get_edge_feats(r_eids)
+    mem, ts = s0.get_memory(r_nodes)
+    st_ = s0.stats()
+    assert st_["round_trips"] == 1      # everything served from buffer
+    assert st_["pf_misses"] == 0
+    assert st_["pf_hits"] == 2 * len(r_nodes) + len(r_eids)
+    np.testing.assert_array_equal(nf, ref.get_node_feats(r_nodes))
+    np.testing.assert_array_equal(ef, ref.get_edge_feats(r_eids))
+    m_r, t_r = ref.get_memory(r_nodes)
+    np.testing.assert_array_equal(mem, m_r)
+    np.testing.assert_array_equal(ts, t_r)
+    # already-staged rows are filtered from the next prefetch's request
+    assert len(s0.pf_filter_new("node", r_nodes)) == 0
+    # pf_reset (the pre-ingest quiesce) drops the staged rows again
+    s0.pf_reset()
+    assert len(s0.pf_filter_new("node", r_nodes)) == len(r_nodes)
+
+
+def test_memory_staleness_bounds_buffered_reads():
+    def make(staleness):
+        lt = LocalTransport()
+        svc = {}
+        for p in range(P):
+            svc[p] = ShardedStateService(
+                P, d_node=4, d_edge=4, d_memory=3, hosted=(p,),
+                transport=lt, local_rank=p, spmd_writes=False,
+                memory_staleness=staleness)
+            lt.bind_state(svc[p])
+        return svc
+
+    ids = np.arange(8)
+    rid = np.array([1])                 # owner = partition 1: remote
+
+    def commit(s, val, t):
+        s.put_memory(ids, np.full((8, 3), val, np.float32),
+                     np.full(8, t, np.float64))
+
+    for staleness in (0, 1):
+        s0 = make(staleness)[0]
+        commit(s0, 1.0, 1.0)            # version 1 (wire-written: owner)
+        s0.prefetch_async(mem_ids=rid)  # buffered @ version 1
+        m, _ = s0.get_memory(rid)
+        assert m[0, 0] == 1.0           # fresh: always served
+        commit(s0, 2.0, 2.0)            # version 2: buffer now 1 stale
+        m, _ = s0.get_memory(rid)
+        if staleness == 0:
+            # fenced contract: the stale buffer is version-rejected
+            assert m[0, 0] == 2.0
+            assert s0.stats()["stale_served"] == 0
+        else:
+            # bounded-stale: 1 commit old serves, and is counted
+            assert m[0, 0] == 1.0
+            assert s0.stats()["stale_served"] == 1
+            commit(s0, 3.0, 3.0)        # version 3: 2 stale > bound
+            m, _ = s0.get_memory(rid)
+            assert m[0, 0] == 3.0       # refetched + restaged fresh
+            m, _ = s0.get_memory(rid)
+            assert m[0, 0] == 3.0
 
 
 # ---------------------------------------------------------------------------
