@@ -35,8 +35,10 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import ARTIFACTS, emit, save_json
 from repro.launch import multihost
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
 
 WORKER = (Path(__file__).resolve().parent.parent / "tests"
           / "_multihost_worker.py")
@@ -124,10 +126,16 @@ def run() -> None:
     sh_cfg = dict(run_cfg,
                   trainer=dict(run_cfg["trainer"], state="sharded"))
     t1 = time.time()
+    # this fleet runs traced: every worker records spans (REPRO_TRACE
+    # is honored at import) and exports an offset-corrected Chrome
+    # trace the parent merges into artifacts/bench/MH_TRACE.json
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
     sh_outs = multihost.launch(
         [sys.executable, str(WORKER), json.dumps(sh_cfg)],
         n_processes=P, n_local_devices=G, timeout_s=1500.0,
-        extra_env={"PYTHONPATH": f"{src}:{pp}" if pp else src})
+        extra_env={"PYTHONPATH": f"{src}:{pp}" if pp else src,
+                   "REPRO_TRACE": "1",
+                   "REPRO_MH_TRACE_DIR": str(ARTIFACTS)})
     sh_wall = time.time() - t1
     sh_results = multihost.parse_results(sh_outs)
     # sharded placement must not change the numbers
@@ -207,6 +215,8 @@ def run() -> None:
          f"reduction={reduction:.1f}x;"
          f"pf_hit_rate={total_pf_hits / max(total_pf, 1):.2f}")
 
+    trace_summary = _check_fleet_trace(sh_results)
+
     save_json("multihost", {
         "topology": {"processes": P, "ranks_per_process": G,
                      "devices_per_process": G + 1,
@@ -230,8 +240,74 @@ def run() -> None:
             "trip_reduction": round(reduction, 2),
             "pf_hit_rate": round(total_pf_hits / max(total_pf, 1), 4),
         },
+        "fleet_trace": trace_summary,
         "losses_agree": True,
     })
+
+
+def _check_fleet_trace(sh_results) -> dict:
+    """Merge the traced sharded fleet's per-worker Chrome traces and
+    verify the timeline tells the truth: both workers present on one
+    offset-corrected clock, the in-flight jitted step and the state
+    prefetch thread on their own lanes CONCURRENT with host work, and
+    the span totals agreeing with the DistRoundMetrics the workers
+    reported (same intervals by construction — ``trace.stage`` feeds
+    both)."""
+    out_path = str(ARTIFACTS / "MH_TRACE.json")
+    merged_path = multihost.collect_fleet_trace(sh_results, out_path)
+    assert merged_path, "traced fleet produced no worker trace files"
+    merged = obs_trace.load_trace(merged_path)
+    xs = [e for e in merged["traceEvents"] if e.get("ph") == "X"]
+    pids = {e["pid"] for e in xs}
+    assert pids == set(range(P)), f"merged trace pids {pids} != 0..{P-1}"
+
+    # lanes: device.step is a virtual lane, state.prefetch lives on the
+    # prefetch thread — both must be distinct tids from the main-thread
+    # pipeline spans of the same worker
+    w0 = [e for e in xs if e["pid"] == 0]
+    steps = [e for e in w0 if e["name"] == "device.step"]
+    prefetch = [e for e in w0 if e["name"] == "pipeline.prefetch"]
+    state_pf = [e for e in w0 if e["name"] == "state.prefetch"]
+    main_tids = {e["tid"] for e in prefetch}
+    assert steps, "no device.step lane in worker 0's trace"
+    assert state_pf, "no state.prefetch spans in worker 0's trace"
+    assert {e["tid"] for e in steps}.isdisjoint(main_tids), \
+        "device.step shares the main-thread lane"
+    assert {e["tid"] for e in state_pf}.isdisjoint(main_tids), \
+        "state.prefetch shares the main-thread lane"
+
+    def _overlaps(a_list, b_list):
+        return any(a["ts"] < b["ts"] + b["dur"]
+                   and b["ts"] < a["ts"] + a["dur"]
+                   for a in a_list for b in b_list)
+
+    # the §4.3 overlap, visible in the timeline itself: batch t's step
+    # retires on the device lane WHILE the host lane prefetches t+1
+    assert _overlaps(steps, prefetch), (
+        "no device.step span overlaps a pipeline.prefetch span — "
+        "pipelining is not visible in the trace")
+
+    # report totals vs the metrics the workers computed from the SAME
+    # intervals: per-kind sums must agree within 10% (ingest excluded —
+    # the warm ingest precedes round accounting but is traced)
+    summary = obs_report.summarize(merged, pid=0)
+    w0_rounds = [r for r in sh_results
+                 if r["process_id"] == 0][0]["rounds"]
+    pairs = {"sample": "sample_s", "fetch": "fetch_s",
+             "step": "step_s", "state.wait": "state_wait_s"}
+    agreement = {}
+    for kind, field in pairs.items():
+        metric = sum(m[field] for m in w0_rounds)
+        span = summary["spans"].get(kind, {}).get("total_s", 0.0)
+        agreement[kind] = {"metrics_s": metric, "trace_s": span}
+        assert abs(span - metric) <= max(0.10 * metric, 0.05), (
+            f"trace/{kind} total {span:.3f}s disagrees with summed "
+            f"round metric {field} {metric:.3f}s (>10%)")
+    emit("multihost/fleet_trace", 0.0,
+         f"events={len(xs)};workers={len(pids)};"
+         f"step_spans={len(steps)};state_pf_spans={len(state_pf)}")
+    return {"path": merged_path, "events": len(xs),
+            "workers": sorted(pids), "agreement": agreement}
 
 
 if __name__ == "__main__":

@@ -2,12 +2,15 @@
 ``name,us_per_call,derived`` (derived = the bench's headline metric)."""
 from __future__ import annotations
 
+import datetime
 import json
 import time
 from pathlib import Path
 from typing import Callable, Dict, List, Optional
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "bench"
+
+SCHEMA_VERSION = 1
 
 _ROWS: List[str] = []
 
@@ -24,8 +27,18 @@ def rows() -> List[str]:
 
 def save_json(name: str, payload: Dict) -> None:
     """Write ``artifacts/bench/BENCH_<name>.json`` — the per-bench
-    artifact CI uploads so the perf trajectory is tracked PR over PR."""
+    artifact CI uploads so the perf trajectory is tracked PR over PR.
+    Every artifact is stamped with a ``_meta`` block (bench name,
+    schema version, UTC generation time) so downstream tooling can
+    tell artifacts apart without parsing filenames or mtimes."""
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    payload = dict(payload)
+    payload["_meta"] = {
+        "bench": name,
+        "schema_version": SCHEMA_VERSION,
+        "generated_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
     (ARTIFACTS / f"BENCH_{name}.json").write_text(
         json.dumps(payload, indent=2, default=str))
 

@@ -5,6 +5,16 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.obs import get_logger
+
+log = get_logger("bench")
 
 
 def main() -> None:
@@ -31,13 +41,13 @@ def main() -> None:
         "roofline": bench_roofline.run,              # deliverable (g)
     }
     if args.only is not None and not args.only:
-        print("--only given without bench names; available: "
-              f"{', '.join(benches)}", file=sys.stderr)
+        log.error("--only given without bench names; available: "
+                  f"{', '.join(benches)}")
         sys.exit(2)
     unknown = set(args.only or []) - benches.keys()
     if unknown:
-        print(f"unknown bench names: {', '.join(sorted(unknown))}; "
-              f"available: {', '.join(benches)}", file=sys.stderr)
+        log.error(f"unknown bench names: {', '.join(sorted(unknown))}; "
+                  f"available: {', '.join(benches)}")
         sys.exit(2)
 
     print("name,us_per_call,derived")
@@ -54,10 +64,9 @@ def main() -> None:
             import traceback
             traceback.print_exc(file=sys.stderr)
             failed.append(name)
-        print(f"# {name} done in {time.time() - t0:.1f}s",
-              file=sys.stderr)
+        log.info(f"{name} done in {time.time() - t0:.1f}s")
     if failed:
-        print(f"# FAILED: {', '.join(failed)}", file=sys.stderr)
+        log.error(f"FAILED: {', '.join(failed)}")
         sys.exit(1)
 
 

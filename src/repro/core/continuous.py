@@ -49,6 +49,8 @@ from repro.data.events import EventStream
 from repro.data.loader import (chronological_batches, replay_mix,
                                sample_negatives)
 from repro.models import gnn as G
+from repro.obs import trace
+from repro.obs.metrics import MetricRegistry
 from repro.train.optimizer import Optimizer, adamw
 
 NULL = -1
@@ -306,6 +308,10 @@ class ContinuousTrainer:
         self.stream = stream
         self.use_pallas = use_pallas
         self.rng = np.random.default_rng(seed)
+        # single source of truth for per-round accounting: stage timers,
+        # cache hit counters and byte counters all live here; RoundMetrics
+        # is a snapshot of it
+        self.metrics = MetricRegistry()
 
         self._init_sampling(threshold, seed)    # sets self.n_partitions
         self.state = self._make_state()
@@ -313,10 +319,12 @@ class ContinuousTrainer:
         cache_e = max(64, int(cache_ratio * len(stream)))
         self.node_cache = FeatureCache(
             cache_n, cfg.d_node, id_space=stream.n_nodes + 1,
-            policy=cache_policy, lam=lam)
+            policy=cache_policy, lam=lam, metrics=self.metrics,
+            name="cache.node")
         self.edge_cache = FeatureCache(
             cache_e, cfg.d_edge, id_space=len(stream) + 1,
-            policy=cache_policy, lam=lam)
+            policy=cache_policy, lam=lam, metrics=self.metrics,
+            name="cache.edge")
 
         self.params: Dict[str, Any] = G.init_params(
             cfg, jax.random.PRNGKey(seed))
@@ -327,15 +335,15 @@ class ContinuousTrainer:
         self.assembler = FeatureAssembler(
             cfg, fetch_node=self._fetch_node, fetch_edge=self._fetch_edge,
             edge_feat_fn=self.state.get_edge_feats, memory=self.memory,
-            timers={"sample": 0.0, "fetch": 0.0, "ingest": 0.0,
-                    "step": 0.0})
+            timers=self.metrics.timers("sample", "fetch", "ingest",
+                                       "step"))
         self.builder = BatchBuilder(stream, rng=self.rng)
         self.timers = self.assembler.timers
 
         self.optimizer: Optimizer = adamw(lr, weight_decay=0.0)
         self.opt_state = self.optimizer.init(self.params)
         self.history: Optional[EventStream] = None
-        self._refresh_bytes = 0
+        self._c_refresh_bytes = self.metrics.counter("refresh_bytes")
         self._init_dist_state()
         self._build_steps()
         self.engine = PipelineEngine(overlap=overlap)
@@ -377,7 +385,19 @@ class ContinuousTrainer:
         self._eval_step = jax.jit(forward)
 
     # -- plumbing ---------------------------------------------------------
+    @property
+    def _refresh_bytes(self) -> int:
+        return int(self._c_refresh_bytes.value)
+
+    @_refresh_bytes.setter
+    def _refresh_bytes(self, value: int) -> None:
+        self._c_refresh_bytes.reset(value)
+
     def ingest(self, batch: EventStream) -> float:
+        with trace.span("ingest", events=len(batch.src)):
+            return self._ingest_body(batch)
+
+    def _ingest_body(self, batch: EventStream) -> float:
         t0 = time.perf_counter()
         base = self.graph.num_edges
         eids = self.graph.add_edges(batch.src, batch.dst, batch.ts)
@@ -438,10 +458,9 @@ class ContinuousTrainer:
 
     def _launch_train(self, item, staged):
         batch = self.assembler.finalize(staged)
-        t0 = time.perf_counter()
-        self.params, self.opt_state, loss, _ = self._train_step(
-            self.params, self.opt_state, batch)
-        self.timers["step"] += time.perf_counter() - t0
+        with trace.stage(self.timers, "step", phase="dispatch"):
+            self.params, self.opt_state, loss, _ = self._train_step(
+                self.params, self.opt_state, batch)
         return loss
 
     def _launch_eval(self, item, staged):
@@ -465,9 +484,8 @@ class ContinuousTrainer:
         """Stage boundary: block on the in-flight step, then apply its
         host side effects (TGN raw-message commit)."""
         src, dst, ts, eids = item
-        t0 = time.perf_counter()
-        loss = float(loss)      # block_until_ready on the whole step
-        self.timers["step"] += time.perf_counter() - t0
+        with trace.stage(self.timers, "step", phase="sync"):
+            loss = float(loss)  # block_until_ready on the whole step
         if self.cfg.use_memory:
             if eids is None:    # stream without explicit ids: fall
                 eids = self.events.eids_for(ts)  # back to the ts search
@@ -478,6 +496,10 @@ class ContinuousTrainer:
 
     # -- public API --------------------------------------------------------
     def evaluate(self, events: EventStream) -> Dict[str, float]:
+        with trace.span("eval", events=len(events)):
+            return self._evaluate_body(events)
+
+    def _evaluate_body(self, events: EventStream) -> Dict[str, float]:
         scores_all, labels_all, losses = [], [], []
 
         def complete(handle, item):
@@ -502,6 +524,12 @@ class ContinuousTrainer:
         """Paper §3: evaluate-then-finetune on one incremental batch.
         The finetune loop runs through the pipeline engine: the next
         batch's sampling/fetching overlaps the in-flight train step."""
+        with trace.span("round", events=len(new_events)):
+            return self._train_round_body(new_events, epochs=epochs,
+                                          replay_ratio=replay_ratio)
+
+    def _train_round_body(self, new_events: EventStream, *, epochs: int,
+                          replay_ratio: float) -> RoundMetrics:
         self._reset_round_stats()
 
         ev = self.evaluate(new_events)          # test-then-train

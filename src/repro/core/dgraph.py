@@ -32,6 +32,8 @@ from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace
+
 _GROW = 1.5
 NULL = -1
 
@@ -200,9 +202,10 @@ class DynamicGraph:
                                   eids[order])
 
         # group by source node, preserving chronological order per node
-        sort_by_node = np.argsort(src, kind="stable")
-        self._insert_bulk(src[sort_by_node], dst[sort_by_node],
-                          ts[sort_by_node], eids[sort_by_node])
+        with trace.span("dgraph.add_edges", edges=len(src)):
+            sort_by_node = np.argsort(src, kind="stable")
+            self._insert_bulk(src[sort_by_node], dst[sort_by_node],
+                              ts[sort_by_node], eids[sort_by_node])
 
         self.node_valid[:self.n_nodes] = True
         if len(ts):

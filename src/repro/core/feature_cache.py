@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricRegistry
+
 NULL = -1
 _NEG = jnp.iinfo(jnp.int32).min // 2
 
@@ -168,7 +170,9 @@ class FeatureCache:
 
     def __init__(self, capacity: int, dim: int, id_space: int, *,
                  policy: str = "lru", lam: float = 0.2,
-                 dtype=jnp.float32, use_pallas: bool = False):
+                 dtype=jnp.float32, use_pallas: bool = False,
+                 metrics: Optional[MetricRegistry] = None,
+                 name: str = "cache"):
         assert policy in ("lru", "lfu", "fifo")
         self.capacity = int(capacity)
         self.dim = int(dim)
@@ -176,9 +180,16 @@ class FeatureCache:
         self.max_replace = max(1, int(np.ceil(lam * capacity)))
         self.state = init_cache(capacity, dim, id_space, dtype)
         self.use_pallas = use_pallas
-        self.hits = 0
-        self.accesses = 0
-        self.bypassed = 0     # valid rows excluded by a cacheable mask
+        # hit/miss accounting lives in a MetricRegistry (shared with the
+        # trainer when passed in) — `hits`/`accesses`/`bypassed` remain
+        # readable as attributes via the properties below
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+        self.name = name
+        self._c_hits = self.metrics.counter(f"{name}.hits")
+        self._c_accesses = self.metrics.counter(f"{name}.accesses")
+        self._c_bypassed = self.metrics.counter(f"{name}.bypassed")
+        self._c_inserted = self.metrics.counter(f"{name}.inserted")
+        self._c_invalidated = self.metrics.counter(f"{name}.invalidated")
         # hit mask of the latest fetch(), aligned with its `ids` arg
         # (callers bucket hits per owner partition from it)
         self.last_hit: Optional[np.ndarray] = None
@@ -197,8 +208,8 @@ class FeatureCache:
         ids = jnp.asarray(ids, jnp.int32)
         feats, hit = self._lookup_raw(ids)
         valid = np.asarray(ids) >= 0
-        self.accesses += int(valid.sum())
-        self.hits += int(np.asarray(hit)[valid].sum())
+        self._c_accesses.add(int(valid.sum()))
+        self._c_hits.add(int(np.asarray(hit)[valid].sum()))
         return feats, hit
 
     def update(self, ids, hit, miss_feats) -> None:
@@ -230,6 +241,7 @@ class FeatureCache:
         self.state = dataclasses.replace(
             self.state, slot_of=jnp.asarray(slot_of),
             ids=jnp.asarray(sids), score=jnp.asarray(score))
+        self._c_invalidated.add(len(hot))
         return len(hot)
 
     def probe(self, ids) -> np.ndarray:
@@ -277,22 +289,29 @@ class FeatureCache:
         feats, hit = self._lookup_raw(ids_j)
         hit_np = np.asarray(hit)
         counted = (ids_pad >= 0) if ok is None else ok
-        self.accesses += int(counted.sum())
-        self.hits += int(hit_np[counted].sum())
-        self.bypassed += 0 if ok is None else int(
-            ((ids_pad >= 0) & ~ok).sum())
+        self._c_accesses.add(int(counted.sum()))
+        self._c_hits.add(int(hit_np[counted].sum()))
+        if ok is not None:
+            self._c_bypassed.add(int(((ids_pad >= 0) & ~ok).sum()))
         need = (~hit_np) & (ids_pad >= 0)
         miss_feats = np.zeros((bucket, self.dim), np.float32)
         if need.any():
             miss_feats[need] = fetch_missing(ids_pad[need])
         out = jnp.where(hit[:, None], feats, jnp.asarray(miss_feats))
         if ok is None:
+            ins_mask = need
             self.update(ids_j, hit, miss_feats)
         else:
             # non-cacheable lanes become NULL so the update never
             # spends a slot (or an eviction) on them
+            ins_mask = need & ok
             upd_ids = jnp.asarray(np.where(ok, ids_pad, NULL))
             self.update(upd_ids, hit, miss_feats)
+        if ins_mask.any():
+            # insertion count computed host-side (distinct misses capped
+            # by the anti-thrash quota) — never read back from the device
+            self._c_inserted.add(
+                min(len(np.unique(ids_pad[ins_mask])), self.max_replace))
         self.last_hit = hit_np[:n]
         return out[:n]
 
@@ -321,13 +340,24 @@ class FeatureCache:
 
     # -- stats ----------------------------------------------------------
     @property
+    def hits(self) -> int:
+        return int(self._c_hits.value)
+
+    @property
+    def accesses(self) -> int:
+        return int(self._c_accesses.value)
+
+    @property
+    def bypassed(self) -> int:
+        return int(self._c_bypassed.value)
+
+    @property
     def hit_rate(self) -> float:
         return self.hits / max(self.accesses, 1)
 
     def reset_stats(self) -> None:
-        self.hits = 0
-        self.accesses = 0
-        self.bypassed = 0
+        for c in (self._c_hits, self._c_accesses, self._c_bypassed):
+            c.reset()
 
     def contents(self) -> set:
         ids = np.asarray(self.state.ids)

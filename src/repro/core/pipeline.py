@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mfg import assemble
+from repro.obs import trace
 
 
 class FeatureAssembler:
@@ -93,15 +94,15 @@ class FeatureAssembler:
             seed_mask = np.ones(len(seeds) // 3, np.float32)
         mask_j = jnp.asarray(seed_mask, jnp.float32)
 
-        t0 = time.perf_counter()
-        if cfg.model == "dysat":
-            # one hop-set per time-window snapshot (newest last)
-            snap_layers = [sample_fn(seeds, seed_ts - i * cfg.window)
-                           for i in reversed(range(cfg.n_snapshots))]
-            sampled = {"snap_layers": snap_layers, "mask": mask_j}
-        else:
-            sampled = {"layers": sample_fn(seeds, seed_ts), "mask": mask_j}
-        self.timers["sample"] += time.perf_counter() - t0
+        with trace.stage(self.timers, "sample", seeds=len(seeds)):
+            if cfg.model == "dysat":
+                # one hop-set per time-window snapshot (newest last)
+                snap_layers = [sample_fn(seeds, seed_ts - i * cfg.window)
+                               for i in reversed(range(cfg.n_snapshots))]
+                sampled = {"snap_layers": snap_layers, "mask": mask_j}
+            else:
+                sampled = {"layers": sample_fn(seeds, seed_ts),
+                           "mask": mask_j}
         return sampled
 
     def collect_ids(self, sampled: Dict[str, Any]):
@@ -145,18 +146,16 @@ class FeatureAssembler:
         """Phase 2 of ``prefetch``: cache/StateService feature fetch +
         batch assembly for an already-sampled shard."""
         mask_j = sampled["mask"]
-        t0 = time.perf_counter()
-        if "snap_layers" in sampled:
-            snapshots = [assemble(layers, self.fetch_node,
-                                  self.fetch_edge)
-                         for layers in sampled["snap_layers"]]
-            self.timers["fetch"] += time.perf_counter() - t0
-            return {"batch": {"snapshots": snapshots,
-                              "seed_mask": mask_j},
-                    "layers": None}
-        layers = sampled["layers"]
-        hops = assemble(layers, self.fetch_node, self.fetch_edge)
-        self.timers["fetch"] += time.perf_counter() - t0
+        with trace.stage(self.timers, "fetch", phase="assemble"):
+            if "snap_layers" in sampled:
+                snapshots = [assemble(layers, self.fetch_node,
+                                      self.fetch_edge)
+                             for layers in sampled["snap_layers"]]
+                return {"batch": {"snapshots": snapshots,
+                                  "seed_mask": mask_j},
+                        "layers": None}
+            layers = sampled["layers"]
+            hops = assemble(layers, self.fetch_node, self.fetch_edge)
         return {"batch": {"hops": hops, "seed_mask": mask_j},
                 "layers": layers if self.needs_finalize else None}
 
@@ -173,18 +172,18 @@ class FeatureAssembler:
         layers = staged["layers"]
         if layers is None:
             return staged["batch"]
-        t0 = time.perf_counter()
-        blobs = []
-        for layer in layers:
-            dstb = self.memory.gather(
-                np.asarray(layer.dst_nodes, np.int64), self.edge_feat_fn)
-            nbrb = self.memory.gather(
-                np.asarray(layer.nbr_ids, np.int64).reshape(-1),
-                self.edge_feat_fn)
-            blobs.append((dstb, nbrb))
-        batch = dict(staged["batch"])
-        batch["mem_blobs"] = blobs
-        self.timers["fetch"] += time.perf_counter() - t0
+        with trace.stage(self.timers, "fetch", phase="finalize"):
+            blobs = []
+            for layer in layers:
+                dstb = self.memory.gather(
+                    np.asarray(layer.dst_nodes, np.int64),
+                    self.edge_feat_fn)
+                nbrb = self.memory.gather(
+                    np.asarray(layer.nbr_ids, np.int64).reshape(-1),
+                    self.edge_feat_fn)
+                blobs.append((dstb, nbrb))
+            batch = dict(staged["batch"])
+            batch["mem_blobs"] = blobs
         return batch
 
 
@@ -217,16 +216,31 @@ class PipelineEngine:
             launch: Callable, complete: Callable) -> List[Any]:
         results: List[Any] = []
         inflight = None
+
+        def _finish(pending):
+            # close the virtual device lane only after the sync: the
+            # span then covers dispatch -> retire, which is exactly the
+            # window the host-side prefetch(t+1) span overlaps with.
+            handle, item, dspan = pending
+            with trace.span("pipeline.complete"):
+                out = complete(handle, item)
+            trace.end_async(dspan)
+            return out
+
         try:
             for item in items:
                 if not self.overlap and inflight is not None:
                     pending, inflight = inflight, None
-                    results.append(complete(*pending))
-                staged = prefetch(item)    # overlaps the in-flight step
+                    results.append(_finish(pending))
+                with trace.span("pipeline.prefetch"):
+                    staged = prefetch(item)  # overlaps the in-flight step
                 if inflight is not None:   # stage boundary: sync t
                     pending, inflight = inflight, None
-                    results.append(complete(*pending))
-                inflight = (launch(item, staged), item)
+                    results.append(_finish(pending))
+                dspan = trace.begin_async("device.step", lane="device")
+                with trace.span("pipeline.launch"):
+                    handle = launch(item, staged)
+                inflight = (handle, item, dspan)
         except BaseException:
             # a stage raised mid-round: drain the in-flight step first
             # (its optimizer update already dispatched — completing it
@@ -236,12 +250,12 @@ class PipelineEngine:
             # silently dropped batch.
             if inflight is not None:
                 try:
-                    complete(*inflight)
+                    _finish(inflight)
                 except Exception:
                     pass               # the first failure wins
             raise
         if inflight is not None:           # drain (epoch boundary)
-            results.append(complete(*inflight))
+            results.append(_finish(inflight))
         return results
 
 

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.dgraph import DynamicGraph, NULL
 from repro.core.rand import gumbel_noise
+from repro.obs import trace
 from repro.core.snapshot import GraphSnapshot, build_snapshot
 
 
@@ -324,9 +325,11 @@ class TemporalSampler:
         """Adopt a refreshed snapshot and sync the device mirror (delta
         scatter when the snapshot's delta chains from our version; full
         upload otherwise)."""
-        self.snap = snap
-        with self._on_device():
-            self._sync_device()
+        with trace.span("sampler.refresh") as sp:
+            self.snap = snap
+            with self._on_device():
+                self._sync_device()
+            sp.set(bytes=self.last_refresh_bytes)
 
     # -- device mirror maintenance ------------------------------------
     def _table_cols(self) -> int:
@@ -475,7 +478,8 @@ class TemporalSampler:
     def sample(self, seeds, seed_ts) -> List[SampledLayer]:
         """k-hop sampling in ONE jitted dispatch; returns one
         SampledLayer per fanout entry."""
-        with self._on_device():
+        with trace.span("sampler.sample", seeds=len(seeds)), \
+                self._on_device():
             targets = jnp.asarray(seeds, jnp.int32)
             times = jnp.asarray(seed_ts, jnp.float32)
             tmask = jnp.ones(targets.shape, bool)

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.partition import GraphPartition, owner_of
 from repro.core.sampling import NULL, SampledLayer, TemporalSampler
+from repro.obs import trace
 from repro.core.snapshot import (GraphSnapshot, build_snapshot,
                                  refresh_snapshot)
 
@@ -135,11 +136,13 @@ class DistributedSamplerSystem:
         from it (order-independent across serving processes)."""
         worker = self.samplers[machine][rank]
         key = worker.request_key(req_machine, seq, hop)
-        with self._locks[machine][rank]:
-            a, b, c, d = worker.sample_hop(targets, times, pmask, k,
-                                           key=key)
-        return (np.asarray(a), np.asarray(b), np.asarray(c),
-                np.asarray(d))
+        with trace.span("sample.serve_hop", machine=machine, rank=rank,
+                        n=len(targets)):
+            with self._locks[machine][rank]:
+                a, b, c, d = worker.sample_hop(targets, times, pmask, k,
+                                               key=key)
+            return (np.asarray(a), np.asarray(b), np.asarray(c),
+                    np.asarray(d))
 
     def _route_hop(self, trainer_machine: int, rank: int,
                    targets: np.ndarray, times: np.ndarray,

@@ -89,6 +89,7 @@ from repro.data.events import EventStream
 from repro.dist import collectives as C
 from repro.dist.sharding import shard_map
 from repro.dist.transport import LocalTransport, SamplingTransport
+from repro.obs import trace
 
 
 @dataclasses.dataclass
@@ -268,13 +269,39 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         self.reduce_bytes_per_step = C.grad_payload_bytes(
             self.params, dist.collective, bits=dist.quant_bits,
             frac=dist.topk_frac)
-        self._reduce_bytes = 0
-        self._collective_steps = 0
+        # registry-backed round counters (see the properties below —
+        # the `_x += n` call sites read like plain ints)
+        self._c_reduce_bytes = self.metrics.counter("reduce_bytes")
+        self._c_collective_steps = self.metrics.counter("collective_steps")
+        self._c_staged_batches = self.metrics.counter("staged_batches")
         # per-partition cache accounting: (node=0 | edge=1, partition)
         Pm = dist.n_machines
         self._part_hits = np.zeros((2, Pm), np.int64)
         self._part_accesses = np.zeros((2, Pm), np.int64)
-        self._staged_batches = 0    # global batches staged this round
+
+    @property
+    def _reduce_bytes(self) -> int:
+        return int(self._c_reduce_bytes.value)
+
+    @_reduce_bytes.setter
+    def _reduce_bytes(self, value: int) -> None:
+        self._c_reduce_bytes.reset(value)
+
+    @property
+    def _collective_steps(self) -> int:
+        return int(self._c_collective_steps.value)
+
+    @_collective_steps.setter
+    def _collective_steps(self, value: int) -> None:
+        self._c_collective_steps.reset(value)
+
+    @property
+    def _staged_batches(self) -> int:
+        return int(self._c_staged_batches.value)
+
+    @_staged_batches.setter
+    def _staged_batches(self, value: int) -> None:
+        self._c_staged_batches.reset(value)
 
     # -- multihost global-array staging ------------------------------------
     def _replicated(self, tree):
@@ -609,11 +636,10 @@ class DistributedContinuousTrainer(ContinuousTrainer):
 
     def _launch_train(self, item, staged):
         batch = self._sharded_batch(staged)
-        t0 = time.perf_counter()
-        (self.params, self.opt_state, loss, _,
-         self.err) = self._dist_step(
-            self.params, self.opt_state, batch, self.err)
-        self.timers["step"] += time.perf_counter() - t0
+        with trace.stage(self.timers, "step", phase="dispatch"):
+            (self.params, self.opt_state, loss, _,
+             self.err) = self._dist_step(
+                self.params, self.opt_state, batch, self.err)
         self._reduce_bytes += self.reduce_bytes_per_step
         self._collective_steps += 1
         return loss
@@ -660,6 +686,10 @@ class DistributedContinuousTrainer(ContinuousTrainer):
         while a peer still samples the old round (pre), and nobody
         samples the new round until every peer finished writing
         (post)."""
+        with trace.span("ingest", events=len(batch.src)):
+            return self._ingest_body(batch)
+
+    def _ingest_body(self, batch: EventStream) -> float:
         t0 = time.perf_counter()
         if callable(getattr(self.state, "pf_reset", None)):
             # quiesce the prefetch thread and drop buffered rows BEFORE

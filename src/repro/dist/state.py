@@ -67,6 +67,7 @@ import numpy as np
 
 from repro.core.feature_store import StateService, _Dense
 from repro.core.partition import owner_of
+from repro.obs import trace
 
 
 def pack_state_batch(node_ids=None, eids=None, mem_ids=None) -> Tuple:
@@ -229,8 +230,13 @@ class ShardedStateService(StateService):
         if self.transport is None:
             raise RuntimeError(
                 "partition not hosted here and no transport bound")
+        # span kind mirrors the accounting split below: "state.prefetch"
+        # runs on the background thread's lane (hidden behind the step),
+        # "state.wait" is the caller-blocking critical path
         t0 = time.perf_counter()
-        out = fn()
+        with trace.span("state.prefetch" if background else "state.wait",
+                        peer=p, phase="wire"):
+            out = fn()
         dt = time.perf_counter() - t0
         nbytes = sum(int(a.nbytes) for a in arrays if a is not None)
         if out is not None:
@@ -331,8 +337,9 @@ class ShardedStateService(StateService):
         if not jobs:
             return
         t0 = time.perf_counter()
-        for th, _ in jobs:
-            th.join()
+        with trace.span("state.wait", phase="drain", jobs=len(jobs)):
+            for th, _ in jobs:
+                th.join()
         dt = time.perf_counter() - t0
         with self._acct_lock:
             self.block_wait_s += dt
@@ -657,14 +664,15 @@ class ShardedStateService(StateService):
         """The coalesced read: one frame answers a peer's node-feat +
         edge-feat + memory requests together."""
         self.served_calls += 1
-        nf = ef = mem = ts = None
-        if node_ids is not None and len(node_ids):
-            nf = self._serve_feat("node", node_ids)
-        if eids is not None and len(eids):
-            ef = self._serve_feat("edge", eids)
-        if mem_ids is not None and len(mem_ids):
-            mem, ts = self._serve_mem(mem_ids)
-        return nf, ef, mem, ts
+        with trace.span("state.serve", op="state_batch"):
+            nf = ef = mem = ts = None
+            if node_ids is not None and len(node_ids):
+                nf = self._serve_feat("node", node_ids)
+            if eids is not None and len(eids):
+                ef = self._serve_feat("edge", eids)
+            if mem_ids is not None and len(mem_ids):
+                mem, ts = self._serve_mem(mem_ids)
+            return nf, ef, mem, ts
 
     # -- accounting ------------------------------------------------------
     def resident_bytes(self) -> int:

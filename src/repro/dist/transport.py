@@ -60,9 +60,30 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace
+from repro.obs.metrics import MetricRegistry
+
 _AUTHKEY = b"repro-multihost"
 _OK, _ERR = "ok", "err"
 _CLOSE = object()      # op-handler sentinel: tear down this connection
+
+
+def transport_stats(*, calls: int = 0, bytes_out: int = 0,
+                    bytes_in: int = 0, wait_s: float = 0.0,
+                    state_calls: int = 0, state_bytes: int = 0,
+                    state_wait_s: float = 0.0) -> Dict[str, Any]:
+    """THE transport stats schema. Every ``stats()`` implementation
+    builds its dict through this helper (keyword-only, defaults zero),
+    so a new field cannot silently exist on one transport and not the
+    other — add it here and every implementation gets it."""
+    return {"calls": int(calls), "bytes_out": int(bytes_out),
+            "bytes_in": int(bytes_in), "wait_s": round(float(wait_s), 6),
+            "state_calls": int(state_calls),
+            "state_bytes": int(state_bytes),
+            "state_wait_s": round(float(state_wait_s), 6)}
+
+
+STATS_KEYS: Tuple[str, ...] = tuple(transport_stats().keys())
 
 
 # ---------------------------------------------------------------------------
@@ -223,8 +244,7 @@ class SamplingTransport:
         pass
 
     def stats(self) -> Dict[str, Any]:
-        return {"calls": 0, "bytes_out": 0, "bytes_in": 0, "wait_s": 0.0,
-                "state_calls": 0, "state_bytes": 0, "state_wait_s": 0.0}
+        return transport_stats()
 
 
 class LocalTransport(SamplingTransport):
@@ -327,7 +347,8 @@ class RpcSamplingServer:
                     # caller), not kill this thread and leave the peer
                     # with a bare EOFError
                     op, payload = pickle.loads(raw)
-                    out = OPS.dispatch(self, op, payload)
+                    with trace.span("rpc.serve", op=op, bytes=len(raw)):
+                        out = OPS.dispatch(self, op, payload)
                     if out is _CLOSE:
                         return
                     reply = (_OK, out)
@@ -372,11 +393,46 @@ class RpcTransport(SamplingTransport):
         self._conns: Dict[int, Any] = {}
         self._conn_locks: Dict[int, threading.Lock] = {}
         self._bseq = 0
-        self.calls = 0
-        self.bytes_out = 0
-        self.bytes_in = 0
-        self.wait_s = 0.0
-        self.group_stats: Dict[str, Dict[str, Any]] = {}
+        # wire accounting lives in a MetricRegistry (thread-safe: the
+        # trainer loop and the state-prefetch thread both call _call);
+        # `calls`/`bytes_out`/... stay readable as attributes below
+        self.metrics = MetricRegistry()
+        self._c_calls = self.metrics.counter("rpc.calls")
+        self._c_bytes_out = self.metrics.counter("rpc.bytes_out")
+        self._c_bytes_in = self.metrics.counter("rpc.bytes_in")
+        self._c_wait_s = self.metrics.counter("rpc.wait_s")
+        self._group_counters: Dict[str, Tuple] = {}
+
+    def _group(self, group: str) -> Tuple:
+        g = self._group_counters.get(group)
+        if g is None:
+            g = tuple(self.metrics.counter(f"rpc.{group}.{k}")
+                      for k in ("calls", "bytes_out", "bytes_in",
+                                "wait_s"))
+            self._group_counters[group] = g
+        return g
+
+    @property
+    def calls(self) -> int:
+        return int(self._c_calls.value)
+
+    @property
+    def bytes_out(self) -> int:
+        return int(self._c_bytes_out.value)
+
+    @property
+    def bytes_in(self) -> int:
+        return int(self._c_bytes_in.value)
+
+    @property
+    def wait_s(self) -> float:
+        return self._c_wait_s.value
+
+    @property
+    def group_stats(self) -> Dict[str, Dict[str, Any]]:
+        return {group: {"calls": int(c.value), "bytes_out": int(o.value),
+                        "bytes_in": int(i.value), "wait_s": w.value}
+                for group, (c, o, i, w) in self._group_counters.items()}
 
     def local_machines(self, n_machines: int) -> Tuple[int, ...]:
         assert n_machines == self.n_processes, (
@@ -421,22 +477,22 @@ class RpcTransport(SamplingTransport):
         data = pickle.dumps((op, payload),
                             protocol=pickle.HIGHEST_PROTOCOL)
         t0 = time.perf_counter()
-        with self._conn_locks[machine]:
-            conn = self._conns[machine]
-            conn.send_bytes(data)
-            raw = conn.recv_bytes()
+        with trace.span("rpc.call", op=op, machine=machine) as sp:
+            with self._conn_locks[machine]:
+                conn = self._conns[machine]
+                conn.send_bytes(data)
+                raw = conn.recv_bytes()
+            sp.set(bytes=len(data) + len(raw))
         dt = time.perf_counter() - t0
-        self.wait_s += dt
-        self.calls += 1
-        self.bytes_out += len(data)
-        self.bytes_in += len(raw)
-        g = self.group_stats.setdefault(
-            OPS.group(op),
-            {"calls": 0, "bytes_out": 0, "bytes_in": 0, "wait_s": 0.0})
-        g["calls"] += 1
-        g["bytes_out"] += len(data)
-        g["bytes_in"] += len(raw)
-        g["wait_s"] += dt
+        self._c_wait_s.add(dt)
+        self._c_calls.add(1)
+        self._c_bytes_out.add(len(data))
+        self._c_bytes_in.add(len(raw))
+        gc, go, gi, gw = self._group(OPS.group(op))
+        gc.add(1)
+        go.add(len(data))
+        gi.add(len(raw))
+        gw.add(dt)
         status, result = pickle.loads(raw)
         if status == _ERR:
             raise RuntimeError(
@@ -491,9 +547,10 @@ class RpcTransport(SamplingTransport):
         if client is None:  # not under jax.distributed (unit tests)
             return
         self._bseq += 1
-        client.wait_at_barrier(f"repro-mh-{tag}-{self._bseq}",
-                               timeout_in_ms=int(
-                                   self.barrier_timeout_s * 1000))
+        with trace.span("barrier", tag=tag, seq=self._bseq):
+            client.wait_at_barrier(f"repro-mh-{tag}-{self._bseq}",
+                                   timeout_in_ms=int(
+                                       self.barrier_timeout_s * 1000))
 
     def close(self) -> None:
         for m, conn in self._conns.items():
@@ -509,10 +566,10 @@ class RpcTransport(SamplingTransport):
 
     def stats(self) -> Dict[str, Any]:
         st = self.group_stats.get("state", {})
-        return {"calls": self.calls, "bytes_out": self.bytes_out,
-                "bytes_in": self.bytes_in,
-                "wait_s": round(self.wait_s, 6),
-                "state_calls": st.get("calls", 0),
-                "state_bytes": (st.get("bytes_out", 0)
-                                + st.get("bytes_in", 0)),
-                "state_wait_s": round(st.get("wait_s", 0.0), 6)}
+        return transport_stats(
+            calls=self.calls, bytes_out=self.bytes_out,
+            bytes_in=self.bytes_in, wait_s=self.wait_s,
+            state_calls=st.get("calls", 0),
+            state_bytes=(st.get("bytes_out", 0)
+                         + st.get("bytes_in", 0)),
+            state_wait_s=st.get("wait_s", 0.0))

@@ -47,6 +47,8 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import get_logger, trace
+
 _ENV = {
     "role": "REPRO_MH_ROLE",
     "pid": "REPRO_MH_PROCESS_ID",
@@ -55,8 +57,11 @@ _ENV = {
     "rpc_ports": "REPRO_MH_RPC_PORTS",
     "local_devices": "REPRO_MH_LOCAL_DEVICES",
     "run_cfg": "REPRO_MH_RUN_CFG",
+    "trace_dir": "REPRO_MH_TRACE_DIR",
 }
 RESULT_TAG = "MH_RESULT "
+
+log = get_logger("launch.multihost")
 
 
 @dataclasses.dataclass
@@ -225,6 +230,25 @@ def parse_results(outs: Sequence[Tuple[str, str]]) -> List[Dict]:
     return results
 
 
+def collect_fleet_trace(results: Sequence[Dict],
+                        out_path: str) -> Optional[str]:
+    """Merge the per-worker Chrome traces named in the MH_RESULT lines
+    into one fleet timeline at ``out_path``.  Each worker exported with
+    its clock-sync barrier exit as t=0, so after the merge re-pids the
+    events the lanes already share one offset-corrected clock.  Returns
+    ``out_path``, or None when no worker produced a trace (tracing
+    disabled)."""
+    parts = [(r["trace"]["file"], int(r["process_id"]))
+             for r in results if r.get("trace", {}).get("file")]
+    if not parts:
+        return None
+    missing = [p for p, _ in parts if not os.path.exists(p)]
+    if missing:
+        raise RuntimeError(f"worker trace files missing: {missing}")
+    trace.merge_chrome_files(parts, path=out_path)
+    return out_path
+
+
 # ---------------------------------------------------------------------------
 # Worker side
 # ---------------------------------------------------------------------------
@@ -302,6 +326,7 @@ def worker_main(run_cfg: Dict[str, Any],
                           replay_ratio=run_cfg.get("replay_ratio", 0.0),
                           replay_round=run_cfg.get("replay_round", -1)):
         rounds.append(dataclasses.asdict(m))
+    metrics = {**tr.metrics.snapshot(), **transport.metrics.snapshot()}
     result = {
         "process_id": spec.process_id,
         "n_processes": spec.n_processes,
@@ -309,7 +334,24 @@ def worker_main(run_cfg: Dict[str, Any],
         "rounds": rounds,
         "rpc": transport.stats(),
         "state": tr.state.stats(),
+        "metrics": metrics,
     }
+    if trace.enabled():
+        # every worker reaches this barrier at the same program point
+        # (REPRO_TRACE comes from the parent's env, so enabled() agrees
+        # fleet-wide); the exit timestamp becomes each worker's t=0 and
+        # the merged timeline is clock-offset-corrected to barrier skew
+        transport.barrier("clock-sync")
+        sync = trace.now_us()
+        trace_dir = os.environ.get(_ENV["trace_dir"], ".")
+        trace_path = os.path.join(
+            trace_dir, f"mh_trace_worker{spec.process_id}.json")
+        trace.export_chrome(
+            trace_path, pid=spec.process_id,
+            process_name=f"worker{spec.process_id}",
+            clock_sync_us=sync,
+            metadata={"metrics": metrics})
+        result["trace"] = {"file": trace_path}
     print(RESULT_TAG + json.dumps(result), flush=True)
     # drain peers' last remote fetches before tearing the server down
     transport.barrier("shutdown")
@@ -378,31 +420,45 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "drops the mem-read/commit barriers for a "
                          "bounded loss deviation)")
     ap.add_argument("--timeout", type=float, default=900.0)
+    ap.add_argument("--trace", default=None, metavar="MH_TRACE.json",
+                    help="enable span tracing in every worker and merge "
+                         "the per-worker Chrome traces into one "
+                         "Perfetto-loadable fleet timeline at this path")
     args = ap.parse_args(argv)
 
     run_cfg = _default_run_cfg(args)
+    extra_env = {_ENV["run_cfg"]: json.dumps(run_cfg)}
+    if args.trace:
+        trace_dir = os.path.dirname(os.path.abspath(args.trace)) or "."
+        os.makedirs(trace_dir, exist_ok=True)
+        extra_env["REPRO_TRACE"] = "1"
+        extra_env[_ENV["trace_dir"]] = trace_dir
     outs = launch([sys.executable, "-m", "repro.launch.multihost"],
                   args.processes, args.local_devices,
-                  extra_env={_ENV["run_cfg"]: json.dumps(run_cfg)},
+                  extra_env=extra_env,
                   timeout_s=args.timeout)
     results = parse_results(outs)
     for r in results:
         last = r["rounds"][-1]
-        print(f"worker {r['process_id']}: "
-              f"{len(r['rounds'])} rounds, last loss "
-              f"{last['loss']:.5f}, ap {last['ap']:.4f}, rpc "
-              f"{r['rpc']['calls']} calls / "
-              f"{r['rpc']['bytes_out'] + r['rpc']['bytes_in']} B / "
-              f"{r['rpc']['wait_s']:.2f}s wait, state "
-              f"[{r['state']['mode']}] {r['state']['calls']} calls / "
-              f"{r['state']['resident_bytes']} B resident")
+        log.info(
+            f"worker {r['process_id']}: "
+            f"{len(r['rounds'])} rounds, last loss "
+            f"{last['loss']:.5f}, ap {last['ap']:.4f}, rpc "
+            f"{r['rpc']['calls']} calls / "
+            f"{r['rpc']['bytes_out'] + r['rpc']['bytes_in']} B / "
+            f"{r['rpc']['wait_s']:.2f}s wait, state "
+            f"[{r['state']['mode']}] {r['state']['calls']} calls / "
+            f"{r['state']['resident_bytes']} B resident")
     # replicated training: every process must report the same losses
     l0 = [rd["loss"] for rd in results[0]["rounds"]]
     for r in results[1:]:
         li = [rd["loss"] for rd in r["rounds"]]
         assert all(abs(a - b) <= 1e-6 for a, b in zip(l0, li)), (l0, li)
-    print(f"OK: {args.processes} processes agree on "
-          f"{len(l0)} round losses")
+    if args.trace:
+        merged = collect_fleet_trace(results, args.trace)
+        log.info(f"fleet trace merged: {merged}")
+    log.info(f"OK: {args.processes} processes agree on "
+             f"{len(l0)} round losses")
     return 0
 
 

@@ -1,0 +1,26 @@
+"""repro.obs — fleet-wide observability: span tracing, metric registry,
+structured logging, and the Perfetto/report toolchain.
+
+- :mod:`repro.obs.trace`   — thread-aware span tracer, Chrome trace export,
+  fleet merge (``REPRO_TRACE=1`` to enable).
+- :mod:`repro.obs.metrics` — typed counter/gauge/histogram registry;
+  round metrics are snapshots/deltas of it.
+- :mod:`repro.obs.log`     — structured stderr logger (``REPRO_LOG`` level).
+- :mod:`repro.obs.report`  — ``python -m repro.obs.report <trace.json>``.
+"""
+from repro.obs import trace
+from repro.obs.log import get_logger
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricRegistry, RegistryTimers
+from repro.obs.trace import span, stage
+
+__all__ = [
+    "trace",
+    "span",
+    "stage",
+    "get_logger",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "RegistryTimers",
+]
