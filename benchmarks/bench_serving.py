@@ -1,0 +1,285 @@
+"""Online serving under live ingest (ISSUE 10 tentpole deliverable).
+
+Drives the ``repro.serve`` query engine against a ContinuousTrainer
+while an ingest thread applies event batches at a controlled rate, and
+reports per-tier serving latency (p50/p99) and sustained QPS at idle
+plus >= 2 concurrent ingest rates.
+
+Every measured pass also *re-verifies the serving contracts*, so the
+bench doubles as an end-to-end integration gate:
+
+  * version consistency — a subsample of responses has its recorded
+    hop-0 neighborhoods replayed against the graph REBUILT at exactly
+    the response's pinned snapshot version (a torn read matches no
+    single version);
+  * parity — served link scores equal an offline forward on the pinned
+    handle to <= 1e-4;
+  * latency gate — p99 under ingest must stay <= 5x the idle p99
+    (steady state: a shadow warmup pass pre-compiles every jit shape
+    the growth trajectory visits, so the gate measures contention, not
+    compilation).
+
+``BENCH_QUICK=1`` shrinks sizes for the CI smoke lane.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs.tgn_gdelt import tgat
+from repro.core.continuous import ContinuousTrainer
+from repro.core.dgraph import DynamicGraph
+from repro.core.sampling import oracle_sample
+from repro.data.events import synth_ctdg
+from repro.obs import get_logger
+from repro.serve import EdgeBank, QueryEngine
+
+log = get_logger("bench.serving")
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+N_NODES = 300 if QUICK else 1000
+PREFIX = 2_000 if QUICK else 8_000          # events ingested before t0
+SEGMENT = 1_500 if QUICK else 6_000         # events per measured phase
+CHUNK = 250 if QUICK else 500               # ingest batch size
+RATES = (3_000, 12_000) if QUICK else (5_000, 20_000)   # events/sec
+N_QUERIES = 150 if QUICK else 600           # per phase
+QPS_TARGET = 400 if QUICK else 800          # submit pacing
+FANOUTS = (8, 4)
+N_CONSIST = 24                              # responses replayed vs oracle
+P99_GATE = 5.0                              # p99(ingest) <= gate * p99(idle)
+
+
+def _cfg():
+    return tgat(d_node=8, d_edge=8, d_time=8, d_hidden=16,
+                fanouts=FANOUTS, sampling="recent", batch_size=128)
+
+
+def _pctl(lat_s, q):
+    return float(np.percentile(np.asarray(lat_s) * 1e3, q))  # -> ms
+
+
+class _Harness:
+    """One trainer + engine + the version->event-prefix ledger."""
+
+    def __init__(self, stream, threshold):
+        self.stream = stream
+        self.threshold = threshold
+        self.tr = ContinuousTrainer(_cfg(), stream, threshold=threshold,
+                                    cache_ratio=0.1, overlap=False)
+        self.eng = QueryEngine.attach(
+            self.tr, edgebank=EdgeBank(), record_neighbors=True,
+            history=64, max_batch=64, admit_timeout_s=0.002)
+        self.version_prefix = {}
+        self._vlock = threading.Lock()
+        self.cursor = 0
+
+    def ingest(self, hi):
+        self.tr.ingest(self.stream.slice(self.cursor, hi))
+        self.cursor = hi
+        with self._vlock:
+            self.version_prefix[
+                self.eng.publisher.current().version] = hi
+
+    def close(self):
+        self.eng.stop()
+
+
+def _query_phase(h: _Harness, rng, t_hi, *, ingest_rate=0.0,
+                 ingest_hi=None):
+    """Fire N_QUERIES paced link queries; optionally ingest events at
+    ``ingest_rate`` ev/s on a side thread until ``ingest_hi``."""
+    stop = threading.Event()
+
+    def _ingester():
+        while not stop.is_set() and h.cursor < ingest_hi:
+            t0 = time.perf_counter()
+            h.ingest(min(h.cursor + CHUNK, ingest_hi))
+            budget = CHUNK / ingest_rate
+            sleep = budget - (time.perf_counter() - t0)
+            if sleep > 0:
+                time.sleep(sleep)
+
+    th = None
+    if ingest_rate > 0:
+        th = threading.Thread(target=_ingester, name="bench-ingest")
+        th.start()
+    pending = []
+    gap = 1.0 / QPS_TARGET
+    t_start = time.perf_counter()
+    for _ in range(N_QUERIES):
+        uv = rng.integers(0, N_NODES, 2)
+        ts = np.full(1, t_hi, np.float32)
+        pending.append(
+            ((uv[:1], uv[1:], ts),
+             h.eng.submit_link(uv[:1], uv[1:], ts)))
+        time.sleep(gap)
+    results = [(q, f.result(120)) for q, f in pending]
+    wall = time.perf_counter() - t_start
+    if th is not None:
+        stop.set()
+        th.join()
+        if h.cursor < ingest_hi:       # queries outlasted the segment
+            h.ingest(ingest_hi)
+    gnn = [r for _, r in results if r.tier == "gnn"]
+    lat = [r.latency_s for r in gnn]
+    return dict(results=results,
+                qps=len(results) / wall,
+                p50_ms=_pctl(lat, 50), p99_ms=_pctl(lat, 99),
+                fallback_frac=1.0 - len(gnn) / max(len(results), 1))
+
+
+def _check_consistency(h: _Harness, results, rng):
+    """Replay a subsample's recorded hop-0 neighborhoods against the
+    graph rebuilt at each response's pinned version."""
+    gnn = [(q, r) for q, r in results if r.tier == "gnn"
+           and r.nbrs is not None]
+    take = [gnn[i] for i in
+            rng.choice(len(gnn), min(N_CONSIST, len(gnn)),
+                       replace=False)]
+    for (src, dst, ts), res in take:
+        hi = h.version_prefix.get(res.version)
+        assert hi is not None, \
+            f"response pinned unknown version {res.version}"
+        s = h.stream
+        g = DynamicGraph(threshold=h.threshold, undirected=True)
+        g.add_edges(s.src[:hi], s.dst[:hi], s.ts[:hi])
+        seeds = np.concatenate([src, dst])
+        want = oracle_sample(g, seeds,
+                             np.concatenate([ts, ts]).astype(np.float64),
+                             fanouts=FANOUTS, policy="recent")[0]
+        got_ids = np.concatenate([res.nbrs["ids"], res.nbrs["dst_ids"]])
+        got_mask = np.concatenate(
+            [res.nbrs["mask"], res.nbrs["dst_mask"]])
+        w_mask = np.asarray(want.mask)
+        assert np.array_equal(got_mask, w_mask), \
+            f"neighborhood mask torn at version {res.version}"
+        assert np.array_equal(got_ids[w_mask],
+                              np.asarray(want.nbr_ids)[w_mask]), \
+            f"neighborhood ids torn at version {res.version}"
+    return len(take)
+
+
+def _check_parity(h: _Harness, results):
+    """Served scores vs an offline forward on the pinned handle."""
+    checked = 0
+    for (src, dst, ts), res in reversed(results):
+        if res.tier != "gnn" or checked >= 8:
+            continue
+        try:
+            off = h.eng.offline_forward(res.version, src, dst, ts)
+        except KeyError:               # version evicted from history
+            continue
+        err = float(np.max(np.abs(np.asarray(res.scores) - off)))
+        assert err <= 1e-4, \
+            f"serving/offline divergence {err:.2e} at v{res.version}"
+        checked += 1
+    assert checked > 0, "no responses were parity-checkable"
+    return checked
+
+
+def _pass(stream, *, measure: bool) -> dict:
+    """One full trajectory: warm prefix, idle phase, one phase per
+    ingest rate.  The un-measured shadow pass fills the jit caches for
+    every array shape the growth trajectory visits."""
+    rng = np.random.default_rng(7)
+    h = _Harness(stream, threshold=32)
+    t_hi = float(stream.ts.max()) + 1.0
+    out = {}
+    try:
+        for lo in range(0, PREFIX, CHUNK):
+            h.ingest(lo + CHUNK)
+        # compile the serving sample+forward for every pow2 batch shape
+        # the admission loop can produce (offline_forward shares the
+        # jitted programs with the worker), so the measured phases hit
+        # warm caches at every batch size
+        h.eng.query_link(np.zeros(1, np.int64), np.ones(1, np.int64),
+                         np.full(1, t_hi, np.float32))
+        v = h.eng.publisher.current().version
+        for n in (1, 2, 4, 8, 16, 32, 64):
+            ids = np.arange(n, dtype=np.int64) % N_NODES
+            h.eng.offline_forward(v, ids, (ids + 1) % N_NODES,
+                                  np.full(n, t_hi, np.float32))
+        idle = _query_phase(h, rng, t_hi)
+        out["idle"] = idle
+        hi = PREFIX
+        for rate in RATES:
+            hi += SEGMENT
+            ph = _query_phase(h, rng, t_hi, ingest_rate=rate,
+                              ingest_hi=hi)
+            out[f"ingest@{rate}"] = ph
+            if measure:
+                ph["n_consistency_checked"] = _check_consistency(
+                    h, ph["results"], rng)
+                ph["n_parity_checked"] = _check_parity(
+                    h, ph["results"])
+        if measure:
+            idle["n_parity_checked"] = _check_parity(h, idle["results"])
+        else:
+            # warmup only: re-run the batch-size ladder at every
+            # DISTINCT device shape the trajectory published (quantized
+            # shapes change at pow2 boundaries; a boundary crossed
+            # mid-segment would otherwise compile per batch bucket on
+            # the measured query path)
+            seen = set()
+            for v in h.eng.publisher.versions():
+                hd = h.eng.publisher.get(v)
+                key = tuple(a.shape for a in hd.dev.values())
+                if key in seen:
+                    continue
+                seen.add(key)
+                for n in (1, 2, 4, 8, 16, 32, 64):
+                    ids = np.arange(n, dtype=np.int64) % N_NODES
+                    h.eng.offline_forward(
+                        v, ids, (ids + 1) % N_NODES,
+                        np.full(n, t_hi, np.float32))
+        out["versions_published"] = h.eng.publisher.publishes
+        out["batches"] = h.eng.metrics.counter("serve.batches").value
+        out["queries"] = h.eng.metrics.counter("serve.queries").value
+    finally:
+        h.close()
+    return out
+
+
+def run() -> None:
+    stream = synth_ctdg(n_nodes=N_NODES,
+                        n_events=PREFIX + SEGMENT * len(RATES) + CHUNK,
+                        d_node=8, d_edge=8, alpha=1.5, seed=0)
+    log.info("shadow warmup pass (jit shape pre-compilation)")
+    _pass(stream, measure=False)
+    log.info("measured pass")
+    out = _pass(stream, measure=True)
+
+    payload = {"quick": QUICK, "rates": list(RATES),
+               "n_queries_per_phase": N_QUERIES,
+               "versions_published": out["versions_published"],
+               "admission_batches": out["batches"],
+               "admitted_queries": out["queries"], "phases": {}}
+    idle = out["idle"]
+    emit("serving/idle", idle["p50_ms"] * 1e3,
+         f"p99={idle['p99_ms']:.1f}ms qps={idle['qps']:.0f}")
+    payload["phases"]["idle"] = {
+        k: v for k, v in idle.items() if k != "results"}
+    for rate in RATES:
+        ph = out[f"ingest@{rate}"]
+        emit(f"serving/ingest@{rate}", ph["p50_ms"] * 1e3,
+             f"p99={ph['p99_ms']:.1f}ms qps={ph['qps']:.0f} "
+             f"fallback={ph['fallback_frac']:.2f}")
+        payload["phases"][f"ingest@{rate}"] = {
+            k: v for k, v in ph.items() if k != "results"}
+        ratio = ph["p99_ms"] / max(idle["p99_ms"], 1e-9)
+        payload["phases"][f"ingest@{rate}"]["p99_vs_idle"] = ratio
+        if ratio > P99_GATE:
+            raise RuntimeError(
+                f"p99 under ingest@{rate} is {ratio:.1f}x idle "
+                f"({ph['p99_ms']:.1f}ms vs {idle['p99_ms']:.1f}ms), "
+                f"gate is {P99_GATE}x")
+    save_json("serving", payload)
+
+
+if __name__ == "__main__":
+    run()

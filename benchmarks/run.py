@@ -27,7 +27,8 @@ def main() -> None:
                             bench_cache, bench_continuous,
                             bench_distributed, bench_graph_update,
                             bench_multihost, bench_roofline,
-                            bench_sampling, bench_scaling)
+                            bench_sampling, bench_scaling,
+                            bench_serving)
     benches = {
         "graph_update": bench_graph_update.run,      # Tab.2 / Fig.8
         "block_sizing": bench_block_sizing.run,      # Tab.6 / Fig.12
@@ -39,6 +40,7 @@ def main() -> None:
         "multihost": bench_multihost.run,            # §5 (real processes)
         "scaling": bench_scaling.run,                # Fig.15 / Tab.7
         "roofline": bench_roofline.run,              # deliverable (g)
+        "serving": bench_serving.run,                # online serving wing
     }
     if args.only is not None and not args.only:
         log.error("--only given without bench names; available: "

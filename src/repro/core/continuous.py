@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -343,6 +343,9 @@ class ContinuousTrainer:
         self.optimizer: Optimizer = adamw(lr, weight_decay=0.0)
         self.opt_state = self.optimizer.init(self.params)
         self.history: Optional[EventStream] = None
+        # online-serving listeners (repro.serve): notified after every
+        # ingest (new snapshot version) and finetune round (new params)
+        self._serving: List[Any] = []
         self._c_refresh_bytes = self.metrics.counter("refresh_bytes")
         self._init_dist_state()
         self._build_steps()
@@ -422,6 +425,11 @@ class ContinuousTrainer:
         # delta-upload: only the changed snapshot rows go to the device
         self.sampler.refresh(self._snap)
         self._refresh_bytes += self.sampler.last_refresh_bytes
+        # serving listeners see the new version only now — after the
+        # snapshot refresh AND the feature/memory writes above, so a
+        # query pinning the published handle finds every row it needs
+        for listener in self._serving:
+            listener.on_publish(self, self._snap, batch, nodes, uniq_e)
         dt = time.perf_counter() - t0
         self.timers["ingest"] += dt
         return dt
@@ -495,6 +503,21 @@ class ContinuousTrainer:
         return loss
 
     # -- public API --------------------------------------------------------
+    def register_serving(self, listener: Any) -> None:
+        """Attach an online-serving listener (``repro.serve``).  The
+        listener's ``on_publish(trainer, snap, batch, nodes, eids)``
+        fires at the end of every ingest — the snapshot refresh and all
+        feature/memory writes for the batch have landed — and
+        ``on_params(params)`` at the end of every finetune round.  If a
+        snapshot already exists the listener is primed immediately so
+        queries can be answered before the first post-attach ingest."""
+        self._serving.append(listener)
+        if self._snap is not None:
+            listener.on_publish(self, self._snap, None,
+                                np.zeros(0, np.int64),
+                                np.zeros(0, np.int64))
+            listener.on_params(self.params)
+
     def evaluate(self, events: EventStream) -> Dict[str, float]:
         with trace.span("eval", events=len(events)):
             return self._evaluate_body(events)
@@ -559,6 +582,8 @@ class ContinuousTrainer:
 
         self.history = (train_set if self.history is None
                         else _concat_streams(self.history, new_events))
+        for listener in self._serving:       # round done: fresh params
+            listener.on_params(self.params)
         return self._round_metrics(ev, last_loss, train_s)
 
     # -- round bookkeeping hooks -------------------------------------------

@@ -255,8 +255,12 @@ _sample_khop = jax.jit(
                      "use_pallas"))
 
 
-# donated in-place scatters: the device mirror's old buffer is reused,
-# so a steady-state refresh transfers only the updated rows/cells
+# device-mirror scatters.  The donated variants reuse the old buffer in
+# place (single-consumer trainer mirror: a steady-state refresh
+# transfers only the updated rows/cells).  The copy-on-write variants
+# allocate a fresh output buffer so PREVIOUS readers stay valid — the
+# serving wing's versioned read handles pin old buffers while ingest
+# publishes new ones (repro.serve.handle).
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_rows(buf, rows, upd):
     return buf.at[rows].set(upd)
@@ -265,6 +269,236 @@ def _scatter_rows(buf, rows, upd):
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_cells(buf, rows, lanes, upd):
     return buf.at[rows, lanes].set(upd)
+
+
+@jax.jit
+def _scatter_rows_cow(buf, rows, upd):
+    return buf.at[rows].set(upd)
+
+
+@jax.jit
+def _scatter_cells_cow(buf, rows, lanes, upd):
+    return buf.at[rows, lanes].set(upd)
+
+
+class DeviceMirror:
+    """Device-resident mirror of a :class:`GraphSnapshot`.
+
+    Factored out of ``TemporalSampler`` so the trainer's sampler and the
+    online-serving read path share ONE mirror-maintenance implementation
+    (delta scatter when the snapshot's delta chains from the mirrored
+    version, full upload otherwise):
+
+    * ``donate=True`` (the trainer mirror): scatters donate the old
+      buffer, so updates are in place and only one consumer may hold
+      the returned dict at a time;
+    * ``donate=False`` (the serving wing): every ``sync`` that changes
+      anything returns a FRESH dict whose updated arrays are new
+      buffers (copy-on-write at array granularity) — a reader holding a
+      previously returned dict keeps a complete, immutable view of that
+      version, which is exactly what a versioned query handle pins.
+    """
+
+    #: pad fill per device array — quantized uploads extend each array
+    #: with entries no sampler ever dereferences (NULL page ids / +inf
+    #: timestamps / invalid lanes)
+    _FILL = dict(page_table=NULL, pages_nbr=NULL, pages_eid=NULL,
+                 pages_ts=np.inf, pages_valid=False,
+                 page_tmin=np.inf, page_tmax=-np.inf)
+
+    def __init__(self, *, scan_pages: int, use_pallas: bool = False,
+                 donate: bool = True, quantize: bool = False):
+        self.scan_pages = int(scan_pages)
+        self.use_pallas = use_pallas
+        self.donate = donate
+        # quantize=True rounds every device array's leading (row)
+        # dimension up to a power of two and pins the page-table width
+        # at scan_pages, so the mirrored shapes change O(log n) times as
+        # the graph grows instead of at every geometric reallocation.
+        # The jitted samplers retrace per distinct shape — for the
+        # serving wing (queries race ingest) an unquantized mirror would
+        # recompile sample_khop for every (growth step x batch bucket)
+        # pair, each a multi-hundred-ms stall on the query path.
+        self.quantize = quantize
+        self.dev: Optional[dict] = None   # current device arrays
+        self.version = -1                 # snapshot version mirrored
+        self.snap_obj = None              # snapshot object the mirror was
+        #                                   built from — deltas chain via
+        #                                   in-place mutation, so versions
+        #                                   from a DIFFERENT object are
+        #                                   unrelated (full upload)
+        self.last_refresh_bytes = 0       # H2D payload of the last sync
+        self.total_refresh_bytes = 0
+
+    def _host(self, a: np.ndarray) -> np.ndarray:
+        """CPU jax may zero-copy ALIAS an aligned numpy buffer, and the
+        snapshot arena mutates its host arrays in place between
+        versions.  The trainer mirror (donate=True) always re-syncs to
+        the newest version before sampling, so aliasing is harmless
+        there — but a serving handle pins its arrays across later
+        ingests, so the non-donated mirror must own private copies of
+        anything it uploads wholesale."""
+        return a if self.donate else np.array(a, copy=True)
+
+    def _target_shape(self, name: str, host: np.ndarray) -> tuple:
+        if not self.quantize:
+            return host.shape
+        rows = 1 << max(3, int(host.shape[0] - 1).bit_length())
+        if name == "page_table":
+            return (rows, self.scan_pages)
+        return (rows,) + host.shape[1:]
+
+    def _quantized(self, name: str, host: np.ndarray) -> np.ndarray:
+        """Host array padded to its quantized device shape (a private
+        copy either way — see ``_host``)."""
+        tgt = self._target_shape(name, host)
+        if tgt == host.shape:
+            return self._host(host)
+        out = np.full(tgt, self._FILL[name], host.dtype)
+        out[tuple(slice(0, s) for s in host.shape)] = host
+        return out
+
+    def _table_cols(self, snap: GraphSnapshot) -> int:
+        """The samplers never read past the scan_pages-newest pages, so
+        the mirror only holds that prefix of the page table — hub nodes
+        with thousand-page chains would otherwise blow the table up to
+        (N, max_pages)."""
+        return min(self.scan_pages, snap.page_table.shape[1])
+
+    def _upload_full(self, snap: GraphSnapshot) -> None:
+        table = np.ascontiguousarray(
+            snap.page_table[:, :self._table_cols(snap)])
+        self.dev = dict(
+            page_table=jnp.asarray(self._quantized("page_table", table)),
+            pages_nbr=jnp.asarray(self._quantized("pages_nbr", snap.nbr)),
+            pages_eid=jnp.asarray(self._quantized("pages_eid", snap.eid)),
+            pages_ts=jnp.asarray(self._quantized("pages_ts", snap.ts)),
+            pages_valid=jnp.asarray(
+                self._quantized("pages_valid", snap.valid)),
+        )
+        self.last_refresh_bytes += (
+            table.nbytes + snap.nbr.nbytes + snap.eid.nbytes
+            + snap.ts.nbytes + snap.valid.nbytes)
+        if self.use_pallas:
+            # the Pallas kernel additionally consumes the t_min/t_max
+            # descriptors its page-skip logic reads
+            self.dev.update(
+                page_tmin=jnp.asarray(
+                    self._quantized("page_tmin", snap.page_tmin)),
+                page_tmax=jnp.asarray(
+                    self._quantized("page_tmax", snap.page_tmax)),
+            )
+            self.last_refresh_bytes += (snap.page_tmin.nbytes
+                                        + snap.page_tmax.nbytes)
+
+    def _scatter(self, name: str, host: np.ndarray, rows: np.ndarray,
+                 lanes: Optional[np.ndarray] = None) -> None:
+        """Mirror the changed entries of ``host`` into the device
+        buffer: whole rows, or (row, lane) cells when ``lanes`` is given
+        (the append-only page arrays — only the lanes filled since the
+        last refresh move over the wire). Reallocated host arrays
+        (geometric growth) and deltas covering most of the buffer fall
+        back to a full re-upload of that array. The index count is
+        padded to a power of two (repeating the first index, which is
+        idempotent) so the number of distinct traces stays O(log P)."""
+        dev = self.dev[name]
+        n = len(rows)
+        denom = host.shape[0] if lanes is None else host.size
+        tgt = self._target_shape(name, host)
+        if dev.shape == tgt and n == 0:
+            return
+        if dev.shape != tgt or n * 2 >= denom:
+            self.dev[name] = jnp.asarray(self._quantized(name, host))
+            self.last_refresh_bytes += host.nbytes
+            return
+        rows_f = _scatter_rows if self.donate else _scatter_rows_cow
+        cells_f = _scatter_cells if self.donate else _scatter_cells_cow
+        bucket = 1 << (n - 1).bit_length()
+        pad = bucket - n
+        rows_p = np.concatenate([rows, np.full(pad, rows[0], rows.dtype)])
+        if lanes is None:
+            upd = host[rows_p]
+            if upd.ndim == 2 and dev.shape[1] != upd.shape[1]:
+                # quantized page-table width: pad the gathered rows out
+                # to the device width (the graph hasn't grown chains
+                # that long yet)
+                wide = np.full((len(rows_p), dev.shape[1]),
+                               self._FILL[name], host.dtype)
+                wide[:, :upd.shape[1]] = upd
+                upd = wide
+            self.dev[name] = rows_f(
+                dev, jnp.asarray(rows_p, jnp.int32), jnp.asarray(upd))
+            self.last_refresh_bytes += upd.nbytes + rows_p.size * 4
+        else:
+            lanes_p = np.concatenate(
+                [lanes, np.full(pad, lanes[0], lanes.dtype)])
+            upd = host[rows_p, lanes_p]
+            self.dev[name] = cells_f(
+                dev, jnp.asarray(rows_p, jnp.int32),
+                jnp.asarray(lanes_p, jnp.int32), jnp.asarray(upd))
+            self.last_refresh_bytes += upd.nbytes + rows_p.size * 8
+
+    def sync(self, snap: GraphSnapshot) -> dict:
+        """Bring the mirror to ``snap``'s version; returns the device
+        dict reflecting exactly that version."""
+        if (self.dev is not None and self.snap_obj is snap
+                and self.version == snap.version):
+            self.last_refresh_bytes = 0   # in sync: nothing transferred
+            return self.dev
+        self.last_refresh_bytes = 0
+        d = snap.delta
+        if (self.dev is None or d is None or d.full
+                or self.snap_obj is not snap
+                or d.base_version != self.version):
+            self._upload_full(snap)
+        else:
+            if not self.donate:
+                # fresh dict per version: readers of the previous dict
+                # (pinned query handles) keep the old arrays
+                self.dev = dict(self.dev)
+            self._scatter("page_table",
+                          snap.page_table[:, :self._table_cols(snap)],
+                          d.table_rows)
+            self._scatter("pages_nbr", snap.nbr, d.cell_rows,
+                          d.cell_lanes)
+            self._scatter("pages_eid", snap.eid, d.cell_rows,
+                          d.cell_lanes)
+            self._scatter("pages_ts", snap.ts, d.cell_rows, d.cell_lanes)
+            self._scatter("pages_valid", snap.valid,
+                          d.cell_rows, d.cell_lanes)
+            # deletions/offloads flip validity outside the appended
+            # cells: those pages re-upload their (small) validity rows
+            self._scatter("pages_valid", snap.valid, d.valid_rows)
+            if self.use_pallas:
+                self._scatter("page_tmin", snap.page_tmin, d.page_rows)
+                self._scatter("page_tmax", snap.page_tmax, d.page_rows)
+        self.version = snap.version
+        self.snap_obj = snap
+        self.total_refresh_bytes += self.last_refresh_bytes
+        return self.dev
+
+
+def sample_khop(dev: dict, seeds, seed_ts, *, fanouts: Sequence[int],
+                policy: str = "recent", window: float = 0.0,
+                scan_pages: int = 16, use_pallas: bool = False,
+                key=None) -> List[SampledLayer]:
+    """Fused k-hop sampling against an explicit device mirror dict.
+
+    The serving read path (``repro.serve``) dispatches through this
+    against a *pinned* handle's arrays — same jitted program as
+    ``TemporalSampler.sample`` (the jit cache is shared), but the
+    caller controls which snapshot version answers."""
+    targets = jnp.asarray(seeds, jnp.int32)
+    times = jnp.asarray(seed_ts, jnp.float32)
+    tmask = jnp.ones(targets.shape, bool)
+    if key is None:
+        key = _zero_key()
+    scan = min(int(scan_pages), dev["page_table"].shape[1])
+    raw = _sample_khop(dev, targets, times, tmask, key,
+                       fanouts=tuple(int(f) for f in fanouts),
+                       policy=policy, window=float(window),
+                       scan_pages=scan, use_pallas=use_pallas)
+    return [SampledLayer(*h) for h in raw]
 
 
 class TemporalSampler:
@@ -305,15 +539,10 @@ class TemporalSampler:
         # machine, request seq, hop) into this so results are
         # independent of request arrival order across processes
         self.base_key = self._key
-        self._dev = None          # persistent device mirror of the snapshot
-        self._dev_version = -1    # snapshot version the mirror reflects
-        self._dev_snap = None     # snapshot object the mirror was built
-        #                           from — deltas chain via in-place
-        #                           mutation, so versions from a DIFFERENT
-        #                           object (e.g. a fresh build_snapshot)
-        #                           are unrelated and force a full upload
-        self.last_refresh_bytes = 0   # H2D payload of the last sync
-        self.total_refresh_bytes = 0
+        # persistent device mirror of the snapshot (donated in-place
+        # scatters: the trainer's sampler is the single consumer)
+        self._mirror = DeviceMirror(scan_pages=self.scan_pages,
+                                    use_pallas=use_pallas, donate=True)
 
     def _on_device(self):
         """Placement scope for mirror uploads + sampling dispatches."""
@@ -331,104 +560,53 @@ class TemporalSampler:
                 self._sync_device()
             sp.set(bytes=self.last_refresh_bytes)
 
-    # -- device mirror maintenance ------------------------------------
-    def _table_cols(self) -> int:
-        """The sampler never reads past its scan_pages-newest pages, so
-        the device mirror only holds that prefix of the page table —
-        hub nodes with thousand-page chains would otherwise blow the
-        table up to (N, max_pages)."""
-        return min(self.scan_pages, self.snap.page_table.shape[1])
+    # -- device mirror maintenance (see DeviceMirror) ------------------
+    # The _dev/_dev_version/refresh-bytes surface predates the mirror
+    # extraction; tests and benches poke it (including assigning
+    # ``smp._dev = None`` to force a full upload), so it stays as
+    # delegating properties.
+    @property
+    def _dev(self):
+        return self._mirror.dev
 
-    def _upload_full(self) -> None:
-        s = self.snap
-        table = np.ascontiguousarray(s.page_table[:, :self._table_cols()])
-        self._dev = dict(
-            page_table=jnp.asarray(table),
-            pages_nbr=jnp.asarray(s.nbr),
-            pages_eid=jnp.asarray(s.eid),
-            pages_ts=jnp.asarray(s.ts),
-            pages_valid=jnp.asarray(s.valid),
-        )
-        self.last_refresh_bytes += (
-            table.nbytes + s.nbr.nbytes + s.eid.nbytes + s.ts.nbytes
-            + s.valid.nbytes)
-        if self.use_pallas:
-            # the Pallas kernel additionally consumes the t_min/t_max
-            # descriptors its page-skip logic reads
-            self._dev.update(
-                page_tmin=jnp.asarray(s.page_tmin),
-                page_tmax=jnp.asarray(s.page_tmax),
-            )
-            self.last_refresh_bytes += (s.page_tmin.nbytes
-                                        + s.page_tmax.nbytes)
+    @_dev.setter
+    def _dev(self, value):
+        self._mirror.dev = value
 
-    def _scatter(self, name: str, host: np.ndarray, rows: np.ndarray,
-                 lanes: Optional[np.ndarray] = None) -> None:
-        """Mirror the changed entries of ``host`` into the device
-        buffer: whole rows, or (row, lane) cells when ``lanes`` is given
-        (the append-only page arrays — only the lanes filled since the
-        last refresh move over the wire). Reallocated host arrays
-        (geometric growth) and deltas covering most of the buffer fall
-        back to a full re-upload of that array. The index count is
-        padded to a power of two (repeating the first index, which is
-        idempotent) so the number of distinct traces stays O(log P)."""
-        dev = self._dev[name]
-        n = len(rows)
-        denom = host.shape[0] if lanes is None else host.size
-        if dev.shape == host.shape and n == 0:
-            return
-        if dev.shape != host.shape or n * 2 >= denom:
-            self._dev[name] = jnp.asarray(host)
-            self.last_refresh_bytes += host.nbytes
-            return
-        bucket = 1 << (n - 1).bit_length()
-        pad = bucket - n
-        rows_p = np.concatenate([rows, np.full(pad, rows[0], rows.dtype)])
-        if lanes is None:
-            upd = host[rows_p]
-            self._dev[name] = _scatter_rows(
-                dev, jnp.asarray(rows_p, jnp.int32), jnp.asarray(upd))
-            self.last_refresh_bytes += upd.nbytes + rows_p.size * 4
-        else:
-            lanes_p = np.concatenate(
-                [lanes, np.full(pad, lanes[0], lanes.dtype)])
-            upd = host[rows_p, lanes_p]
-            self._dev[name] = _scatter_cells(
-                dev, jnp.asarray(rows_p, jnp.int32),
-                jnp.asarray(lanes_p, jnp.int32), jnp.asarray(upd))
-            self.last_refresh_bytes += upd.nbytes + rows_p.size * 8
+    @property
+    def _dev_version(self) -> int:
+        return self._mirror.version
+
+    @_dev_version.setter
+    def _dev_version(self, value: int) -> None:
+        self._mirror.version = value
+
+    @property
+    def _dev_snap(self):
+        return self._mirror.snap_obj
+
+    @_dev_snap.setter
+    def _dev_snap(self, value) -> None:
+        self._mirror.snap_obj = value
+
+    @property
+    def last_refresh_bytes(self) -> int:
+        return self._mirror.last_refresh_bytes
+
+    @last_refresh_bytes.setter
+    def last_refresh_bytes(self, value: int) -> None:
+        self._mirror.last_refresh_bytes = value
+
+    @property
+    def total_refresh_bytes(self) -> int:
+        return self._mirror.total_refresh_bytes
+
+    @total_refresh_bytes.setter
+    def total_refresh_bytes(self, value: int) -> None:
+        self._mirror.total_refresh_bytes = value
 
     def _sync_device(self):
-        s = self.snap
-        if (self._dev is not None and self._dev_snap is s
-                and self._dev_version == s.version):
-            self.last_refresh_bytes = 0   # in sync: nothing transferred
-            return self._dev
-        self.last_refresh_bytes = 0
-        d = s.delta
-        if (self._dev is None or d is None or d.full
-                or self._dev_snap is not s
-                or d.base_version != self._dev_version):
-            self._upload_full()
-        else:
-            self._scatter("page_table",
-                          s.page_table[:, :self._table_cols()],
-                          d.table_rows)
-            self._scatter("pages_nbr", s.nbr, d.cell_rows, d.cell_lanes)
-            self._scatter("pages_eid", s.eid, d.cell_rows, d.cell_lanes)
-            self._scatter("pages_ts", s.ts, d.cell_rows, d.cell_lanes)
-            self._scatter("pages_valid", s.valid,
-                          d.cell_rows, d.cell_lanes)
-            # deletions/offloads flip validity outside the appended
-            # cells: those pages re-upload their (small) validity rows
-            self._scatter("pages_valid", s.valid, d.valid_rows)
-            if self.use_pallas:
-                self._scatter("page_tmin", s.page_tmin, d.page_rows)
-                self._scatter("page_tmax", s.page_tmax, d.page_rows)
-        self._dev_version = s.version
-        self._dev_snap = s
-        self.total_refresh_bytes += self.last_refresh_bytes
-        return self._dev
+        return self._mirror.sync(self.snap)
 
     # -- sampling ------------------------------------------------------
     def request_key(self, req_machine: int, seq: int, hop: int):

@@ -143,6 +143,7 @@ class ShardedStateService(StateService):
         self._pf_rows: Dict[str, Dict[int, np.ndarray]] = {
             "node": {}, "edge": {}}
         self._pf_mem: Dict[int, Tuple[np.ndarray, float, int]] = {}
+        self._pf_error: Optional[BaseException] = None
         self.pf_wire_s = 0.0          # wire time on the background thread
         self.pf_block_s = 0.0         # portion the caller still waited on
         self.pf_hits = 0
@@ -332,21 +333,35 @@ class ShardedStateService(StateService):
 
     def _pf_drain(self) -> None:
         """Join in-flight prefetch jobs; the join time is real
-        critical-path waiting and is accounted as such."""
+        critical-path waiting and is accounted as such.
+
+        A failed job's error is held in ``_pf_error`` until it is
+        raised HERE — the entry point of every stage that touches the
+        prefetch machinery (``prefetch_async``, ``pf_reset``, the
+        remote-read paths).  Before raising, every staging buffer is
+        cleared: the failed thread may have landed rows from its
+        earlier successful peers, and a round that aborted mid-stage
+        (``PipelineEngine.run`` swallows secondary errors while
+        draining) must not serve that partial state next round."""
         jobs, self._pf_jobs = self._pf_jobs, []
-        if not jobs:
-            return
-        t0 = time.perf_counter()
-        with trace.span("state.wait", phase="drain", jobs=len(jobs)):
-            for th, _ in jobs:
-                th.join()
-        dt = time.perf_counter() - t0
-        with self._acct_lock:
-            self.block_wait_s += dt
-            self.pf_block_s += dt
-        for _, box in jobs:
-            if box["error"] is not None:
-                raise box["error"]
+        if jobs:
+            t0 = time.perf_counter()
+            with trace.span("state.wait", phase="drain", jobs=len(jobs)):
+                for th, _ in jobs:
+                    th.join()
+            dt = time.perf_counter() - t0
+            with self._acct_lock:
+                self.block_wait_s += dt
+                self.pf_block_s += dt
+            for _, box in jobs:
+                if box["error"] is not None and self._pf_error is None:
+                    self._pf_error = box["error"]   # first failure wins
+        if self._pf_error is not None:
+            err, self._pf_error = self._pf_error, None
+            with self._pf_lock:
+                for buf in (*self._pf_rows.values(), self._pf_mem):
+                    buf.clear()
+            raise err
 
     def pf_filter_new(self, table: str, ids: np.ndarray) -> np.ndarray:
         """Drop ids already staged in the prefetch buffer (features are

@@ -61,7 +61,10 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.obs import trace
+from repro.obs.log import get_logger
 from repro.obs.metrics import MetricRegistry
+
+log = get_logger("rpc")
 
 _AUTHKEY = b"repro-multihost"
 _OK, _ERR = "ok", "err"
@@ -312,9 +315,11 @@ class RpcSamplingServer:
     """
 
     def __init__(self, system, port: int, authkey: bytes = _AUTHKEY,
-                 state=None):
+                 state=None, machine: int = -1):
         self.system = system
         self.state = state
+        self.machine = machine        # serving machine id, for log lines
+        self.port = port
         self.listener = Listener(("127.0.0.1", port), authkey=authkey)
         self._closing = False
         self._accept = threading.Thread(target=self._accept_loop,
@@ -326,9 +331,14 @@ class RpcSamplingServer:
         while not self._closing:
             try:
                 conn = self.listener.accept()
-            except Exception:
+            except Exception as e:
                 if self._closing:
                     return
+                # a broken listener used to be swallowed silently here,
+                # manifesting to peers as a connect/request hang — log
+                # every failure so a dead accept loop is visible
+                log.error("rpc accept failed", machine=self.machine,
+                          port=self.port, error=repr(e))
                 time.sleep(0.05)   # don't busy-spin a broken listener
                 continue
             threading.Thread(target=self._serve_conn, args=(conn,),
@@ -341,6 +351,7 @@ class RpcSamplingServer:
                     raw = conn.recv_bytes()
                 except (EOFError, OSError):
                     return
+                op = "<unpickle>"
                 try:
                     # the unpickle is inside the try: a malformed frame
                     # must reply an error (which re-raises on the
@@ -353,11 +364,20 @@ class RpcSamplingServer:
                         return
                     reply = (_OK, out)
                 except Exception as e:  # surface on the caller
+                    # the error DOES travel back to the caller, but log
+                    # it server-side too: if the reply send below also
+                    # fails, this line is the only trace left
+                    log.warn("rpc dispatch failed", machine=self.machine,
+                             op=op, error=f"{type(e).__name__}: {e}")
                     reply = (_ERR, f"{type(e).__name__}: {e}")
                 try:
                     conn.send_bytes(pickle.dumps(
                         reply, protocol=pickle.HIGHEST_PROTOCOL))
-                except (BrokenPipeError, OSError):
+                except (BrokenPipeError, OSError) as e:
+                    # undeliverable reply: the peer will see a raw EOF
+                    # with no context — record which op's answer died
+                    log.error("rpc reply undeliverable",
+                              machine=self.machine, op=op, error=repr(e))
                     return
 
     def close(self) -> None:
@@ -443,7 +463,8 @@ class RpcTransport(SamplingTransport):
 
     def bind(self, system) -> None:
         self.server = RpcSamplingServer(
-            system, self.ports[self.process_id], self.authkey)
+            system, self.ports[self.process_id], self.authkey,
+            machine=self.process_id)
 
     def bind_state(self, state) -> None:
         assert self.server is not None, "bind() before bind_state()"

@@ -71,9 +71,14 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
         if self.async_save:
+            # NON-daemon: a daemon writer could be killed at interpreter
+            # exit mid-write, truncating the newest checkpoint — exactly
+            # what this module promises never happens.  The thread is
+            # joined by the next save / wait / close, and being
+            # non-daemon the interpreter itself waits for it on exit.
             self._thread = threading.Thread(
                 target=self._write, args=(step, named, manifest),
-                daemon=True)
+                daemon=False, name="ckpt-writer")
             self._thread.start()
         else:
             self._write(step, named, manifest)
@@ -86,19 +91,44 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
         arrays = {f"a{i}": arr for i, (_, arr) in enumerate(named)}
         np.savez(tmp / "arrays.npz", **arrays)
-        (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
+        # manifest via temp file + fsync + os.replace: a reader of the
+        # final dir must never see a half-written MANIFEST.json
+        mpath = tmp / "MANIFEST.json"
+        mtmp = tmp / ".MANIFEST.json.tmp"
+        with open(mtmp, "w") as f:
+            f.write(json.dumps(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(mtmp, mpath)
         # fsync the array file for durability, then atomic rename
         with open(tmp / "arrays.npz", "rb") as f:
             os.fsync(f.fileno())
         if final.exists():
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        os.replace(tmp, final)
+        # fsync the parent directory so the rename itself is durable
+        dfd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
         self._gc()
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+
+    def close(self) -> None:
+        """Join any in-flight writer.  Safe to call repeatedly; also
+        runs via the context-manager protocol."""
+        self.wait()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _gc(self) -> None:
         ckpts = self.all_steps()

@@ -464,3 +464,138 @@ def test_trainer_rejects_unknown_state_mode():
     with pytest.raises(ValueError, match="unknown state mode"):
         DistributedContinuousTrainer(cfg, stream, DistConfig(2, 1),
                                      state="magic")
+
+
+# ---------------------------------------------------------------------------
+# prefetch-abort hygiene (regression): a prefetch-thread error must not
+# be dropped when the round aborts before a drain, and the partially
+# staged rows from the failed batch must never leak into the next round
+# ---------------------------------------------------------------------------
+
+
+class _FlakyTransport(LocalTransport):
+    """``state_batch`` dies for the machines in ``fail_machines`` —
+    after the same job already staged rows from a healthy peer."""
+
+    def __init__(self):
+        super().__init__()
+        self.fail_machines = set()
+
+    def state_batch(self, machine, node_ids, eids, mem_ids):
+        if machine in self.fail_machines:
+            raise ConnectionError(f"peer {machine} went away")
+        return super().state_batch(machine, node_ids, eids, mem_ids)
+
+
+def test_prefetch_error_clears_buffer_and_reraises_next_entry():
+    P3 = 3
+    t = _FlakyTransport()
+    svcs = {}
+    for p in range(P3):
+        svcs[p] = ShardedStateService(
+            P3, d_node=4, d_edge=3, d_memory=0, hosted=(p,),
+            transport=t, local_rank=p, spmd_writes=False)
+        t.bind_state(svcs[p])
+    client = svcs[0]
+    ids = np.arange(30)
+    feats = np.random.default_rng(0).normal(size=(30, 4)) \
+        .astype(np.float32)
+    client.put_node_feats(ids, feats)
+
+    # one prefetch spanning both peers: peer 1's rows land in the
+    # staging buffer, then peer 2's trip fails on the background thread
+    t.fail_machines = {2}
+    remote = ids[ids % P3 != 0]
+    assert client.prefetch_async(node_ids=remote) == 2
+    for th, _ in client._pf_jobs:      # join WITHOUT draining — the
+        th.join()                      # aborted-round scenario
+    assert any(box["error"] is not None for _, box in client._pf_jobs)
+    assert len(client._pf_rows["node"]) > 0   # partial rows staged
+
+    # next stage entry surfaces the error instead of dropping it...
+    with pytest.raises(ConnectionError, match="went away"):
+        client.pf_reset()
+    # ...and the partial staging is gone, not served next round
+    assert not client._pf_rows["node"]
+    assert not client._pf_rows["edge"]
+    assert not client._pf_mem
+
+    # the error does not ring twice, and the service recovers: reads
+    # and fresh prefetches go back over the (healed) wire exactly
+    t.fail_machines = set()
+    client.pf_reset()
+    np.testing.assert_array_equal(client.get_node_feats(ids), feats)
+    assert client.prefetch_async(node_ids=remote) == 2
+    client._pf_drain()
+    np.testing.assert_array_equal(client.get_node_feats(remote),
+                                  feats[remote])
+
+
+def test_prefetch_error_surfaces_at_prefetch_entry_too():
+    """The other entry point: a failed job left undrained must raise at
+    the NEXT ``prefetch_async``, then stop ringing."""
+    P2 = 2
+    t = _FlakyTransport()
+    svcs = {}
+    for p in range(P2):
+        svcs[p] = ShardedStateService(
+            P2, d_node=4, d_edge=3, d_memory=0, hosted=(p,),
+            transport=t, local_rank=p, spmd_writes=False)
+        t.bind_state(svcs[p])
+    client = svcs[0]
+    ids = np.arange(10)
+    client.put_node_feats(
+        ids, np.ones((10, 4), np.float32))
+    t.fail_machines = {1}
+    remote = ids[ids % P2 == 1]
+    assert client.prefetch_async(node_ids=remote) == 1
+    for th, _ in client._pf_jobs:
+        th.join()
+    t.fail_machines = set()
+    with pytest.raises(ConnectionError):
+        client.prefetch_async(node_ids=remote)
+    # the failed entry cleared the error: this one issues normally
+    assert client.prefetch_async(node_ids=remote) == 1
+    client._pf_drain()
+
+
+# ---------------------------------------------------------------------------
+# rpc serve-loop observability (regression): failures used to be
+# swallowed silently — now they go through repro.obs.log with the
+# serving machine id and op
+# ---------------------------------------------------------------------------
+
+
+def test_rpc_dispatch_failures_are_logged(rpc_pair, capfd):
+    ta, tb = rpc_pair
+    _wire_services(ta, tb)
+    with pytest.raises(RuntimeError, match="hosts partitions"):
+        ta.feat_get(1, "node", np.array([0]))   # routing bug on server 1
+    err = capfd.readouterr().err
+    assert "rpc dispatch failed" in err
+    assert "machine=1" in err
+    assert "op=feat_get" in err
+
+
+def test_rpc_accept_failures_are_logged(capfd):
+    import time as _time
+    from multiprocessing.connection import Client
+    from repro.dist.transport import RpcSamplingServer
+    port = multihost.free_ports(1)[0]
+    srv = RpcSamplingServer(None, port, machine=3)
+    try:
+        # a peer dialing with the wrong authkey makes accept() raise
+        # AuthenticationError server-side — previously swallowed bare
+        with pytest.raises(Exception):
+            Client(("127.0.0.1", port), authkey=b"wrong-key")
+        deadline = _time.monotonic() + 5.0
+        err = ""
+        while _time.monotonic() < deadline:
+            err += capfd.readouterr().err
+            if "rpc accept failed" in err:
+                break
+            _time.sleep(0.02)
+        assert "rpc accept failed" in err
+        assert "machine=3" in err
+    finally:
+        srv.close()

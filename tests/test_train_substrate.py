@@ -71,6 +71,33 @@ def test_checkpoint_atomic_no_partial(tmp_path):
     assert step == 2
 
 
+def test_checkpoint_async_writer_joined_on_close(tmp_path):
+    """Regression: the async writer used to be a daemon thread with no
+    join on teardown — interpreter exit could truncate a checkpoint
+    mid-write.  The writer is now non-daemon and ``close()`` joins it,
+    so after close the newest checkpoint is fully durable on disk."""
+    import json as _json
+    import threading as _threading
+    with CheckpointManager(tmp_path, keep=3, async_save=True) as mgr:
+        mgr.save(7, {"x": jnp.arange(64, dtype=jnp.float32)})
+        th = mgr._thread
+        assert th is not None and not th.daemon
+    # context exit == close(): writer joined, thread slot cleared
+    assert mgr._thread is None
+    assert not any(t.name == "ckpt-writer" and t.is_alive()
+                   for t in _threading.enumerate())
+    d = tmp_path / "step-0000000007"
+    assert d.is_dir()
+    manifest = _json.loads((d / "MANIFEST.json").read_text())
+    assert manifest["step"] == 7
+    assert not list(tmp_path.glob(".tmp-*"))        # no stragglers
+    assert not list(d.glob(".MANIFEST.json.tmp"))   # manifest atomic
+    step, st, _ = mgr.restore({"x": jnp.zeros(64)})
+    assert step == 7
+    np.testing.assert_allclose(np.asarray(st["x"]), np.arange(64))
+    mgr.close()                                     # idempotent
+
+
 def test_trainer_resume_exact(tmp_path):
     cfg = get_arch("yi-6b").reduced()
     tcfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=5,
